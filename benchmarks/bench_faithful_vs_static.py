@@ -1,0 +1,69 @@
+"""Beyond-paper: faithful (per-iteration SortByKey) vs static (hoisted
+segmentation) execution modes.
+
+The paper's own profiling blames SortByKey/ReduceByKey for its scaling
+ceiling; the static mode removes the per-iteration sort entirely because
+the neighborhood structure is EM-invariant (DESIGN.md §2).  Both modes
+produce identical labels; this bench quantifies the win, which is the
+PMRF-side baseline-vs-optimized entry of EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_problems, print_csv, time_fn
+from repro.core.pmrf import em as em_mod
+
+
+def run(size: int = 96, grid: int = 12) -> list:
+    rows = []
+    for prob in build_problems(size=size, grid=grid):
+        hoods, model = prob.problem.hoods, prob.problem.model
+        labels0 = jnp.asarray(prob.labels0)
+        mu0 = jnp.asarray(prob.mu0)
+        sigma0 = jnp.asarray(prob.sigma0)
+
+        results = {}
+        times = {}
+        for mode in ("faithful", "static"):
+            cfg = em_mod.EMConfig(mode=mode)
+            times[mode] = time_fn(
+                lambda cfg=cfg: em_mod.run_em(
+                    hoods, model, labels0, mu0, sigma0, cfg
+                ),
+                repeats=3,
+            )
+            results[mode] = em_mod.run_em(hoods, model, labels0, mu0, sigma0, cfg)
+
+        same = bool(
+            (np.asarray(results["faithful"].labels)
+             == np.asarray(results["static"].labels)).all()
+        )
+        rows.append(
+            (
+                prob.name,
+                round(times["faithful"], 4),
+                round(times["static"], 4),
+                round(times["faithful"] / times["static"], 2),
+                same,
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print_csv(
+        "faithful vs static DPP modes (identical labels required)",
+        ["dataset", "faithful_s", "static_s", "speedup_x", "labels_identical"],
+        rows,
+    )
+    assert all(r[-1] for r in rows), "modes must agree exactly"
+
+
+if __name__ == "__main__":
+    main()

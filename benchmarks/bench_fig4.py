@@ -1,0 +1,99 @@
+"""Paper Fig. 4 / §4.3.2 analogue: per-DPP timing breakdown + problem-size
+scaling.
+
+The paper's per-DPP analysis found SortByKey + ReduceByKey dominate and
+limit scaling.  We reproduce the breakdown by running one EM iteration's
+primitive sequence eagerly under the DPP profiler, per dataset, and a
+problem-size scaling curve (single core -> scaling is over problem size,
+the shape of the work, rather than thread count).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_problems, print_csv, time_fn
+from repro.core import dpp
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import energy as E
+
+
+def _one_map_iteration(hoods, model, labels, mu, sigma, mode: str):
+    energies = E.label_energies(hoods, model, labels, mu, sigma)
+    if mode == "faithful":
+        min_e, arg = E.min_energies_faithful(hoods, energies)
+    else:
+        min_e, arg = E.min_energies_static(energies)
+    hood_e = E.hood_energy_sums(hoods, min_e)
+    labels = E.vote_labels(hoods, arg, hoods.n_regions)
+    mu, sigma = E.update_parameters(model, labels, mode)
+    return labels, mu, sigma, hood_e
+
+
+def per_dpp_breakdown(mode: str = "faithful") -> list:
+    rows = []
+    for prob in build_problems():
+        hoods, model = prob.problem.hoods, prob.problem.model
+        labels = jnp.asarray(prob.labels0)
+        mu = jnp.asarray(prob.mu0)
+        sigma = jnp.asarray(prob.sigma0)
+        with dpp.profiled() as prof:
+            for _ in range(3):
+                labels, mu, sigma, _ = _one_map_iteration(
+                    hoods, model, labels, mu, sigma, mode
+                )
+        totals = prof.totals()
+        counts = prof.counts()
+        total = sum(totals.values()) or 1.0
+        for name in sorted(totals, key=lambda k: -totals[k]):
+            rows.append(
+                (
+                    prob.name,
+                    mode,
+                    name,
+                    counts[name],
+                    round(totals[name] * 1e3, 3),
+                    round(100.0 * totals[name] / total, 1),
+                )
+            )
+    return rows
+
+
+def size_scaling() -> list:
+    """Optimization runtime vs problem size (fixed grid density)."""
+    rows = []
+    for size, grid in ((64, 8), (96, 12), (128, 16), (192, 24)):
+        from benchmarks.common import build_problems as bp
+
+        prob = bp(size=size, grid=grid)[0]
+        hoods, model = prob.problem.hoods, prob.problem.model
+        labels0 = jnp.asarray(prob.labels0)
+        mu0 = jnp.asarray(prob.mu0)
+        sigma0 = jnp.asarray(prob.sigma0)
+        cfg = em_mod.EMConfig(mode="static")
+        t = time_fn(
+            lambda: em_mod.run_em(hoods, model, labels0, mu0, sigma0, cfg),
+            repeats=2,
+        )
+        rows.append((size, hoods.n_hoods, hoods.n_elements, round(t, 4)))
+    return rows
+
+
+def main() -> None:
+    print_csv(
+        "fig4a: per-DPP breakdown (3 MAP iterations, eager profiler)",
+        ["dataset", "mode", "primitive", "calls", "total_ms", "share_pct"],
+        per_dpp_breakdown("faithful"),
+    )
+    print_csv(
+        "fig4b: problem-size scaling (static mode, jit)",
+        ["image_size", "n_hoods", "n_elements", "optimize_s"],
+        size_scaling(),
+    )
+
+
+if __name__ == "__main__":
+    main()

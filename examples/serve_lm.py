@@ -1,0 +1,70 @@
+"""Batched serving example: continuous-batching engine over a reduced LM.
+
+Submits a mixed stream of requests, drives the engine, and prints
+per-request completions + throughput.  Also demonstrates the DPP-based
+top-k sampler (the paper's SortByKey primitive inside the LM stack).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.registry import get_api
+from repro.serving import Request, SamplerConfig, ServingEngine
+
+
+def main() -> None:
+    cfg = get_config("qwen2-1.5b").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+
+    engine = ServingEngine(
+        cfg,
+        params,
+        max_batch=4,
+        max_seq=96,
+        sampler=SamplerConfig(temperature=0.8, top_k=40),
+        seed=0,
+    )
+
+    rng = np.random.default_rng(0)
+    # a wave of equal-length prompts batches together; a longer prompt
+    # joins once lengths align (continuous admission)
+    for rid in range(6):
+        engine.submit(
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+                max_new_tokens=16,
+            )
+        )
+    engine.submit(
+        Request(
+            rid=99,
+            prompt=rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
+            max_new_tokens=8,
+        )
+    )
+
+    import time
+
+    t0 = time.perf_counter()
+    completions = engine.run()
+    dt = time.perf_counter() - t0
+
+    for c in sorted(completions, key=lambda c: c.rid):
+        print(
+            f"rid={c.rid:3d} prompt_len={c.prompt_len:3d} "
+            f"generated={len(c.tokens):3d} finish={c.finish_reason} "
+            f"tokens={c.tokens[:8].tolist()}..."
+        )
+    total = sum(len(c.tokens) for c in completions)
+    print(f"{len(completions)} completions, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s, {engine.ticks} engine ticks)")
+    assert len(completions) == 7
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
+hundred steps on the synthetic pipeline, with checkpointing enabled, and
+verify the loss drops.
+
+The model is the qwen2 family architecture scaled to ~100M params (the
+framework's --arch configs are the full assigned sizes; here we override
+width/depth so the run finishes on CPU).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+from repro.training.fault import StragglerWatchdog, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~110M params: 12 layers, d_model 640, untied 32k embeddings.
+    base = get_config("qwen2-1.5b")
+    cfg = dataclasses.replace(
+        base,
+        n_layers=12,
+        d_model=640,
+        n_heads=10,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=2560,
+        vocab_size=32_768,
+        tie_embeddings=False,
+        param_dtype="float32",
+        compute_dtype="float32",
+        logit_chunk=128,
+        attn_chunk=128,
+        remat_policy="none",
+    )
+
+    from repro.training import data as data_mod
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import (
+        TrainStepConfig,
+        make_sharded_train_state,
+        make_train_step,
+    )
+
+    ts_cfg = TrainStepConfig(
+        optimizer=AdamWConfig(
+            lr=1e-3, warmup_steps=30, total_steps=args.steps, use_master_fp32=False
+        )
+    )
+    state, _ = make_sharded_train_state(cfg, None, ts_cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"]))
+    print(f"params: {n_params/1e6:.1f}M  devices: {jax.device_count()}")
+
+    step_fn = make_train_step(cfg, None, ts_cfg)
+    dcfg = data_mod.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
+    )
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        report = run_training(
+            step_fn=step_fn,
+            state=state,
+            make_batch=lambda i: {
+                k: jax.numpy.asarray(v) for k, v in data_mod.make_batch(dcfg, i).items()
+            },
+            num_steps=args.steps,
+            ckpt_dir=ckpt_dir,
+            ckpt_every=100,
+            log_every=20,
+            watchdog=StragglerWatchdog(),
+        )
+
+    first = float(np.mean(report.losses[:10]))
+    last = float(np.mean(report.losses[-10:]))
+    print(f"loss: first10={first:.3f} -> last10={last:.3f}")
+    assert last < first - 0.5, "loss should drop by >0.5 nats on the copy task"
+    print("OK: loss dropped — end-to-end training works.")
+
+
+if __name__ == "__main__":
+    main()

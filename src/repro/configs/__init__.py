@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES
+from repro.configs.registry import ARCHS, get_config
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "ARCHS", "get_config"]

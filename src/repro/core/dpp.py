@@ -1,0 +1,352 @@
+"""Data-parallel primitives (DPPs) — the paper's building-block vocabulary.
+
+The paper (Lessley et al., DPP-PMRF) expresses the entire PMRF optimization
+in eight canonical primitives: Map, Reduce, ReduceByKey, Scan, Scatter,
+Gather, SortByKey, Unique.  This module is the TPU/JAX-native realization of
+that vocabulary, used by both the PMRF engine (``repro.core.pmrf``) and the
+LM stack (MoE dispatch, SSD scan, top-k sampling).
+
+Two semantic adaptations vs. the VTK-m originals (see DESIGN.md §2):
+
+* **Static shapes** — XLA requires static shapes, so compacting primitives
+  (``unique``) return a padded array plus a ``count``; downstream consumers
+  mask on ``count``.
+* **Keyed reductions without sorting** — ``reduce_by_key`` takes explicit
+  segment ids and a static ``num_segments`` (``jax.ops.segment_*``), because
+  on TPU a scatter-reduce beats sort+adjacent-reduce when the key space is
+  known.  ``sort_by_key`` is still provided (bitonic via ``lax.sort``) for
+  the paper-faithful execution mode.
+
+Every primitive optionally records an invocation event into the active
+:class:`DppProfile` so the per-primitive breakdown of the paper's §4.3.2 can
+be reproduced (``benchmarks/bench_fig4.py``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Profiling (per-DPP breakdown, paper §4.3.2)
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+@dataclass
+class DppProfile:
+    """Accumulates per-primitive wall times (eager mode only).
+
+    Inside ``jit`` the events fuse away; the profiler is intended for the
+    benchmark harness, which runs the pipeline eagerly to reproduce the
+    paper's per-DPP timing analysis.
+    """
+
+    events: Dict[str, List[float]] = field(default_factory=dict)
+
+    def record(self, name: str, seconds: float) -> None:
+        self.events.setdefault(name, []).append(seconds)
+
+    def totals(self) -> Dict[str, float]:
+        return {k: float(sum(v)) for k, v in self.events.items()}
+
+    def counts(self) -> Dict[str, int]:
+        return {k: len(v) for k, v in self.events.items()}
+
+
+@contextlib.contextmanager
+def profiled():
+    """Context manager enabling per-DPP timing; yields the profile."""
+    prof = DppProfile()
+    prev = getattr(_tls, "profile", None)
+    _tls.profile = prof
+    try:
+        yield prof
+    finally:
+        _tls.profile = prev
+
+
+def _active_profile() -> Optional[DppProfile]:
+    return getattr(_tls, "profile", None)
+
+
+def _timed(name: str, fn: Callable[[], Any]) -> Any:
+    prof = _active_profile()
+    if prof is None:
+        return fn()
+    # Eager timing: block on result so the measurement is honest.
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    prof.record(name, time.perf_counter() - t0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Canonical primitives
+# ---------------------------------------------------------------------------
+
+
+def map_(fn: Callable[..., Array], *arrays: Array) -> Array:
+    """Map: apply ``fn`` elementwise over the input arrays (same shape)."""
+    return _timed("Map", lambda: fn(*arrays))
+
+
+def reduce_(values: Array, op: str = "add", initial: Optional[float] = None) -> Array:
+    """Reduce: a single aggregate over all elements."""
+
+    def run():
+        if op == "add":
+            return jnp.sum(values)
+        if op == "min":
+            return jnp.min(values) if initial is None else jnp.minimum(jnp.min(values), initial)
+        if op == "max":
+            return jnp.max(values) if initial is None else jnp.maximum(jnp.max(values), initial)
+        raise ValueError(f"unknown reduce op: {op}")
+
+    return _timed("Reduce", run)
+
+
+def scan_(values: Array, *, exclusive: bool = False, axis: int = 0) -> Array:
+    """Scan: prefix sum.  ``exclusive=True`` shifts by one (identity first)."""
+
+    def run():
+        inc = jnp.cumsum(values, axis=axis)
+        if not exclusive:
+            return inc
+        return inc - values
+
+    return _timed("Scan", run)
+
+
+def gather_(values: Array, indices: Array) -> Array:
+    """Gather: ``out[i] = values[indices[i]]`` (leading axis)."""
+    return _timed("Gather", lambda: jnp.take(values, indices, axis=0))
+
+
+def scatter_(
+    values: Array,
+    indices: Array,
+    out_size: int,
+    *,
+    mode: str = "set",
+    fill: Any = 0,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Scatter: write ``values[i]`` to ``out[indices[i]]``.
+
+    ``mode`` is one of ``set``/``add``/``min``/``max``.  Out-of-range indices
+    are dropped (XLA semantics), which implements the masked-compaction idiom:
+    pass ``mask`` to route invalid lanes to a dropped index.
+    """
+
+    def run():
+        idx = indices
+        if mask is not None:
+            idx = jnp.where(mask, idx, out_size)  # out-of-range -> dropped
+        shape = (out_size,) + values.shape[1:]
+        base_val = jnp.asarray(fill, dtype=values.dtype)
+        out = jnp.full(shape, base_val)
+        ref = out.at[idx]
+        if mode == "set":
+            return ref.set(values, mode="drop")
+        if mode == "add":
+            return ref.add(values, mode="drop")
+        if mode == "min":
+            return ref.min(values, mode="drop")
+        if mode == "max":
+            return ref.max(values, mode="drop")
+        raise ValueError(f"unknown scatter mode: {mode}")
+
+    return _timed("Scatter", run)
+
+
+def sort_by_key(
+    keys: Array, *values: Array, num_keys: int = 1
+) -> Tuple[Array, ...]:
+    """SortByKey: stable ascending sort of ``keys`` carrying ``values``.
+
+    ``keys`` may be a tuple of arrays (lexicographic, major first) by passing
+    them stacked via ``compound_key`` or using ``num_keys > 1`` with keys as a
+    2D ``(num_keys, n)`` array.
+    """
+
+    def run():
+        if num_keys == 1:
+            operands = (keys,) + values
+            out = jax.lax.sort(operands, num_keys=1, is_stable=True)
+        else:
+            operands = tuple(keys) + values
+            out = jax.lax.sort(operands, num_keys=num_keys, is_stable=True)
+        return out
+
+    return _timed("SortByKey", run)
+
+
+def compound_key(major: Array, minor: Array, minor_span: int) -> Array:
+    """Pack (major, minor) int pairs into one sortable int64-safe key.
+
+    ``minor_span`` must be a static upper bound (exclusive) on ``minor``.
+    Used for the paper's (cliqueId, vertexId) pair sorts.
+    """
+    return major.astype(jnp.int64) * minor_span + minor.astype(jnp.int64)
+
+
+def reduce_by_key(
+    segment_ids: Array,
+    values: Array,
+    num_segments: int,
+    op: str = "add",
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    """ReduceByKey: segmented reduction to ``num_segments`` buckets.
+
+    TPU-native form: callers supply segment ids directly (no sort required —
+    see DESIGN.md §2).  For the paper-faithful path, first ``sort_by_key``
+    then pass ``indices_are_sorted=True``.
+    """
+
+    def run():
+        kwargs = dict(
+            num_segments=num_segments, indices_are_sorted=indices_are_sorted
+        )
+        if op == "add":
+            return jax.ops.segment_sum(values, segment_ids, **kwargs)
+        if op == "min":
+            return jax.ops.segment_min(values, segment_ids, **kwargs)
+        if op == "max":
+            return jax.ops.segment_max(values, segment_ids, **kwargs)
+        raise ValueError(f"unknown reduce_by_key op: {op}")
+
+    return _timed("ReduceByKey", run)
+
+
+def unique_(sorted_values: Array, *, fill: Any = 0) -> Tuple[Array, Array]:
+    """Unique: drop adjacent duplicates from a *sorted* array.
+
+    Static-shape adaptation: returns ``(padded_uniques, count)`` where
+    ``padded_uniques`` has the input length, the first ``count`` lanes hold
+    the uniques (in order) and the remainder hold ``fill``.
+    """
+
+    def run():
+        n = sorted_values.shape[0]
+        first = jnp.ones((1,), dtype=bool)
+        is_new = jnp.concatenate(
+            [first, sorted_values[1:] != sorted_values[:-1]]
+        )
+        # Exclusive scan of the "new element" flags gives the write position.
+        pos = jnp.cumsum(is_new) - is_new.astype(jnp.int32)
+        out = scatter_(
+            sorted_values, pos.astype(jnp.int32), n, mode="set", fill=fill, mask=is_new
+        )
+        count = jnp.sum(is_new.astype(jnp.int32))
+        return out, count
+
+    return _timed("Unique", run)
+
+
+# ---------------------------------------------------------------------------
+# Composite DPP idioms used throughout the paper's pipeline
+# ---------------------------------------------------------------------------
+
+
+def counts_to_offsets(counts: Array) -> Array:
+    """CSR offsets from per-row counts: ``offsets[i] = sum(counts[:i])``.
+
+    Returns length ``n+1`` (last entry = total).  Built from Scan.
+    """
+    total = jnp.sum(counts)
+    excl = scan_(counts, exclusive=True)
+    return jnp.concatenate([excl, total[None]]).astype(jnp.int32)
+
+
+def expand(counts: Array, total: int) -> Array:
+    """The DPP "expand"/replicate idiom (paper's repHoods construction).
+
+    Given per-row ``counts`` and the static padded output length ``total``,
+    returns ``src`` of shape ``(total,)`` with ``src[j] = i`` for the j-th
+    output lane belonging to row i.  Lanes beyond ``sum(counts)`` map to the
+    last row+1... they are filled with ``len(counts)`` (an out-of-range
+    sentinel) so callers can mask.  Built from Scatter + Scan (max-scan).
+    """
+    n = counts.shape[0]
+    offsets = scan_(counts, exclusive=True).astype(jnp.int32)
+    valid = counts > 0
+    # Scatter row ids at their start offsets, then a running max fills gaps.
+    marks = scatter_(
+        jnp.arange(n, dtype=jnp.int32),
+        offsets,
+        total,
+        mode="max",
+        fill=-1,
+        mask=valid,
+    )
+    src = jax.lax.associative_scan(jnp.maximum, marks)
+    nvalid = jnp.sum(counts).astype(jnp.int32)
+    lane = jnp.arange(total, dtype=jnp.int32)
+    return jnp.where(lane < nvalid, src, n).astype(jnp.int32)
+
+
+def expand_with_rank(counts: Array, total: int) -> Tuple[Array, Array]:
+    """Like :func:`expand` but also returns the within-row rank of each lane."""
+    src = expand(counts, total)
+    n = counts.shape[0]
+    offsets = scan_(counts, exclusive=True).astype(jnp.int32)
+    safe_src = jnp.minimum(src, n - 1)
+    rank = jnp.arange(total, dtype=jnp.int32) - jnp.take(offsets, safe_src)
+    return src, jnp.where(src < n, rank, 0)
+
+
+def segments_from_sorted(sorted_keys: Array) -> Array:
+    """Dense segment ids (0..k-1) from a sorted key array (Scan over flags)."""
+    first = jnp.zeros((1,), dtype=jnp.int32)
+    is_new = jnp.concatenate(
+        [first, (sorted_keys[1:] != sorted_keys[:-1]).astype(jnp.int32)]
+    )
+    return jnp.cumsum(is_new).astype(jnp.int32)
+
+
+def select_flagged(values: Array, flags: Array, *, fill: Any = 0) -> Tuple[Array, Array]:
+    """Stream-compaction: stable-pack lanes where ``flags`` is true.
+
+    Returns ``(packed, count)`` with static length (= input length).
+    Scan + Scatter, the canonical DPP compaction.
+    """
+    flags_i = flags.astype(jnp.int32)
+    pos = (jnp.cumsum(flags_i) - flags_i).astype(jnp.int32)
+    n = values.shape[0]
+    packed = scatter_(values, pos, n, mode="set", fill=fill, mask=flags)
+    return packed, jnp.sum(flags_i)
+
+
+__all__ = [
+    "DppProfile",
+    "profiled",
+    "map_",
+    "reduce_",
+    "scan_",
+    "gather_",
+    "scatter_",
+    "sort_by_key",
+    "compound_key",
+    "reduce_by_key",
+    "unique_",
+    "counts_to_offsets",
+    "expand",
+    "expand_with_rank",
+    "segments_from_sorted",
+    "select_flagged",
+]

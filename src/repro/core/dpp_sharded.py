@@ -1,0 +1,110 @@
+"""Distributed (multi-device) variants of the DPP vocabulary.
+
+These are the shard_map building blocks that let the PMRF engine run with
+neighborhoods partitioned across a mesh axis — the hybrid distributed PMRF
+the paper lists as future work ([15] Heinemann et al.).  Each primitive is
+written to be called *inside* a ``shard_map`` region: it operates on the
+local shard and uses ``jax.lax`` collectives for the cross-shard step.
+
+Design notes (TPU adaptation):
+
+* Global Scan = local inclusive scan + exclusive scan of per-shard totals.
+  The shard-total exchange is a tiny all-gather (one scalar per shard) —
+  latency-bound, overlapped by XLA with the local pass.
+* Global ReduceByKey with a small, globally-known segment space (the PMRF
+  case: num_neighborhoods segments) = local segment reduce + psum.  This
+  avoids a distributed sort entirely.
+* Global Sort is intentionally NOT provided as a collective: the PMRF
+  pipeline is arranged so sorts stay shard-local (neighborhoods never
+  straddle shards).  A cross-shard sort on TPU would be an all-to-all
+  bitonic exchange; nothing in the paper's pipeline needs it once the
+  graph is partitioned by neighborhood.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def global_scan(values: Array, axis_name: str, *, exclusive: bool = False) -> Array:
+    """Prefix-sum across the concatenation of all shards (leading axis)."""
+    local_inc = jnp.cumsum(values, axis=0)
+    local_total = local_inc[-1] if values.shape[0] > 0 else jnp.zeros(values.shape[1:], values.dtype)
+    # Exclusive prefix of shard totals: gather all totals, sum those before us.
+    totals = jax.lax.all_gather(local_total, axis_name)  # (nshards, ...)
+    idx = jax.lax.axis_index(axis_name)
+    nshards = totals.shape[0]
+    mask_shape = (nshards,) + (1,) * (totals.ndim - 1)
+    mask = (jnp.arange(nshards) < idx).reshape(mask_shape).astype(values.dtype)
+    carry = jnp.sum(totals * mask, axis=0)
+    out = local_inc + carry
+    if exclusive:
+        out = out - values
+    return out
+
+
+def global_reduce(values: Array, axis_name: str, op: str = "add") -> Array:
+    """Single aggregate across every element of every shard."""
+    if op == "add":
+        return jax.lax.psum(jnp.sum(values), axis_name)
+    if op == "min":
+        return jax.lax.pmin(jnp.min(values), axis_name)
+    if op == "max":
+        return jax.lax.pmax(jnp.max(values), axis_name)
+    raise ValueError(f"unknown op {op}")
+
+
+def global_reduce_by_key(
+    segment_ids: Array,
+    values: Array,
+    num_segments: int,
+    axis_name: str,
+    op: str = "add",
+) -> Array:
+    """Segmented reduction over a *global* segment id space.
+
+    Every shard returns the full ``(num_segments, ...)`` result (replicated),
+    which is the right layout for the PMRF convergence bookkeeping where the
+    per-neighborhood sums feed a global decision.
+    """
+    if op == "add":
+        local = jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+        return jax.lax.psum(local, axis_name)
+    if op == "min":
+        local = jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
+        return jax.lax.pmin(local, axis_name)
+    if op == "max":
+        local = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+        return jax.lax.pmax(local, axis_name)
+    raise ValueError(f"unknown op {op}")
+
+
+def global_all_converged(local_flags: Array, axis_name: str) -> Array:
+    """AND-reduce of per-shard convergence flags (paper's Scan-based check)."""
+    local = jnp.all(local_flags)
+    return jax.lax.pmin(local.astype(jnp.int32), axis_name) > 0
+
+
+def shard_bounds(total: int, axis_name: str, axis_size: int) -> Tuple[Array, Array]:
+    """(start, stop) of this shard's slice of a length-``total`` global array,
+    under equal block partitioning (the partitioner pads the last shard)."""
+    per = -(-total // axis_size)  # ceil
+    idx = jax.lax.axis_index(axis_name)
+    start = idx * per
+    stop = jnp.minimum(start + per, total)
+    return start, stop
+
+
+__all__ = [
+    "global_scan",
+    "global_reduce",
+    "global_reduce_by_key",
+    "global_all_converged",
+    "shard_bounds",
+]

@@ -1,0 +1,64 @@
+"""Segmentation evaluation metrics (paper §4.2.1)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class SegMetrics:
+    precision: float
+    recall: float
+    accuracy: float
+    porosity: float
+    porosity_true: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "precision": self.precision,
+            "recall": self.recall,
+            "accuracy": self.accuracy,
+            "porosity": self.porosity,
+            "porosity_true": self.porosity_true,
+        }
+
+
+def evaluate(pred, truth) -> SegMetrics:
+    """precision = TP/(TP+FP), recall = TP/(TP+FN),
+    accuracy = (TP+TN)/all, porosity = V_void / V_total (paper §4.2.1).
+
+    ``pred``/``truth`` are {0,1} arrays; label 1 = solid phase, 0 = void.
+    Label permutation is resolved by picking the assignment with higher
+    accuracy (MRF label ids are arbitrary).
+    """
+    pred = np.asarray(pred).astype(np.int64).ravel()
+    truth = np.asarray(truth).astype(np.int64).ravel()
+
+    def _metrics(p):
+        tp = int(np.sum((p == 1) & (truth == 1)))
+        tn = int(np.sum((p == 0) & (truth == 0)))
+        fp = int(np.sum((p == 1) & (truth == 0)))
+        fn = int(np.sum((p == 0) & (truth == 1)))
+        precision = tp / max(tp + fp, 1)
+        recall = tp / max(tp + fn, 1)
+        accuracy = (tp + tn) / max(tp + tn + fp + fn, 1)
+        return precision, recall, accuracy
+
+    m_direct = _metrics(pred)
+    m_flip = _metrics(1 - pred)
+    pred_final = pred if m_direct[2] >= m_flip[2] else 1 - pred
+    precision, recall, accuracy = max(m_direct, m_flip, key=lambda m: m[2])
+
+    porosity = float(np.mean(pred_final == 0))
+    porosity_true = float(np.mean(truth == 0))
+    return SegMetrics(
+        precision=float(precision),
+        recall=float(recall),
+        accuracy=float(accuracy),
+        porosity=porosity,
+        porosity_true=porosity_true,
+    )

@@ -1,0 +1,111 @@
+"""Oversegmentation (superpixels) — the PMRF preprocessing step.
+
+The paper consumes an oversegmentation produced by statistical region
+merging [35]; the PMRF/DPP-PMRF algorithms themselves only require *some*
+partition of the image into small regions of statistically similar
+intensity.  We implement a SLIC-style iterative superpixel clustering in
+pure JAX (grid-seeded k-means over (y, x, intensity) features), which is
+vectorizable, jittable, and produces the irregular region topology the
+paper's graphs exhibit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("grid", "iters"))
+def slic(
+    image: Array,
+    grid: Tuple[int, int] = (16, 16),
+    iters: int = 5,
+    compactness: float = 0.5,
+) -> Array:
+    """Grid-seeded superpixel oversegmentation.
+
+    Args:
+      image: (H, W) float image (any scale; normalized internally).
+      grid: number of seeds along (rows, cols); n_regions = grid[0]*grid[1].
+      iters: Lloyd iterations.
+      compactness: weight of the spatial term relative to intensity
+        (higher = more grid-like regions).
+
+    Returns:
+      (H, W) int32 label map with labels in [0, n_regions).
+    """
+    h, w = image.shape
+    gy, gx = grid
+    k = gy * gx
+
+    # Light 3x3 box smoothing: superpixel clustering on heavily corrupted
+    # data fragments spatially without it (the paper's SRM oversegmentation
+    # is similarly noise-robust by construction).
+    pad = jnp.pad(image, 1, mode="edge")
+    sm = (
+        pad[:-2, :-2] + pad[:-2, 1:-1] + pad[:-2, 2:]
+        + pad[1:-1, :-2] + pad[1:-1, 1:-1] + pad[1:-1, 2:]
+        + pad[2:, :-2] + pad[2:, 1:-1] + pad[2:, 2:]
+    ) / 9.0
+    img = (sm - jnp.mean(sm)) / (jnp.std(sm) + 1e-6)
+
+    ys = (jnp.arange(gy) + 0.5) * (h / gy)
+    xs = (jnp.arange(gx) + 0.5) * (w / gx)
+    cy, cx = jnp.meshgrid(ys, xs, indexing="ij")
+    step = max(h / gy, w / gx)
+
+    py = jnp.arange(h)[:, None] * jnp.ones((1, w))
+    px = jnp.ones((h, 1)) * jnp.arange(w)[None, :]
+    feats_y = py.ravel()
+    feats_x = px.ravel()
+    feats_i = img.ravel()
+
+    def init_ci(cy, cx):
+        iy = jnp.clip(cy.astype(jnp.int32), 0, h - 1)
+        ix = jnp.clip(cx.astype(jnp.int32), 0, w - 1)
+        return img[iy, ix]
+
+    c_y = cy.ravel()
+    c_x = cx.ravel()
+    c_i = init_ci(c_y, c_x)
+
+    def assign(c_y, c_x, c_i):
+        # (P, K) distances; spatial term normalized by the seed spacing.
+        dy = feats_y[:, None] - c_y[None, :]
+        dx = feats_x[:, None] - c_x[None, :]
+        di = feats_i[:, None] - c_i[None, :]
+        d = compactness * (dy * dy + dx * dx) / (step * step) + di * di
+        return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+    def body(_, carry):
+        c_y, c_x, c_i = carry
+        lab = assign(c_y, c_x, c_i)
+        ones = jnp.ones_like(feats_i)
+        cnt = jax.ops.segment_sum(ones, lab, num_segments=k)
+        sy = jax.ops.segment_sum(feats_y, lab, num_segments=k)
+        sx = jax.ops.segment_sum(feats_x, lab, num_segments=k)
+        si = jax.ops.segment_sum(feats_i, lab, num_segments=k)
+        safe = jnp.maximum(cnt, 1.0)
+        new_y = jnp.where(cnt > 0, sy / safe, c_y)
+        new_x = jnp.where(cnt > 0, sx / safe, c_x)
+        new_i = jnp.where(cnt > 0, si / safe, c_i)
+        return new_y, new_x, new_i
+
+    c_y, c_x, c_i = jax.lax.fori_loop(0, iters, body, (c_y, c_x, c_i))
+    lab = assign(c_y, c_x, c_i)
+    return lab.reshape(h, w)
+
+
+def grid_oversegment(image: Array, block: int = 4) -> Array:
+    """Trivial fixed-grid oversegmentation (fallback / ablation mode)."""
+    h, w = image.shape
+    gy = -(-h // block)
+    gx = -(-w // block)
+    py = jnp.arange(h)[:, None] // block
+    px = jnp.arange(w)[None, :] // block
+    return (py * gx + px).astype(jnp.int32)

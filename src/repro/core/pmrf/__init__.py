@@ -1,0 +1,35 @@
+"""DPP-PMRF: the paper's probabilistic-graphical-model optimizer."""
+
+from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
+from repro.core.pmrf.em import EMConfig, EMResult, run_em
+from repro.core.pmrf.energy import EnergyModel, make_energy_model
+from repro.core.pmrf.graph import RegionGraph, build_region_graph
+from repro.core.pmrf.hoods import Hoods, build_hoods
+from repro.core.pmrf.pipeline import (
+    Problem,
+    SegmentationResult,
+    initialize,
+    optimize,
+    segment_image,
+    segment_volume,
+)
+
+__all__ = [
+    "CliqueSet",
+    "enumerate_maximal_cliques",
+    "EMConfig",
+    "EMResult",
+    "run_em",
+    "EnergyModel",
+    "make_energy_model",
+    "RegionGraph",
+    "build_region_graph",
+    "Hoods",
+    "build_hoods",
+    "Problem",
+    "SegmentationResult",
+    "initialize",
+    "optimize",
+    "segment_image",
+    "segment_volume",
+]

@@ -1,0 +1,230 @@
+"""MRF energy model + MAP/EM inner computations (paper §3.2.2, Alg. 2).
+
+The energy of assigning label ``l`` to hood element ``e`` (vertex v):
+
+    E(e, l) = w_v * [ (y_v - mu_l)^2 / (2 sigma_l^2) + log(sigma_l) ]      (data)
+            + beta * #{ u in hood(e), u != e : x_u != l }                  (smooth)
+
+with y_v the region mean intensity (the paper's data term), w_v the region
+pixel count normalized to unit mean (so beta is scale-free), and x the
+current label field.  This is the standard PMRF likelihood+prior energy
+([39]); the paper's Map step computes the deviation term, and the
+smoothness enters through the neighborhood structure.
+
+Two execution modes (DESIGN.md §2, the baseline-vs-optimized axis):
+
+* ``faithful`` — the paper's exact primitive sequence per MAP iteration:
+  Gather replicated arrays (size 2|hoods|) -> Map energy -> SortByKey to
+  make label pairs adjacent -> ReduceByKey(Min) -> ReduceByKey(Add).
+* ``static``  — beyond-paper TPU mode: the neighborhood structure is
+  EM-invariant, so the sort is hoisted out of the loop entirely; energies
+  are laid out (2, H) and the per-element min is a reshape-free axis-min,
+  the per-hood sum a segment-sum with precomputed ids.
+
+Both modes compute identical values (tested to exact equality on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpp
+from repro.core.pmrf.hoods import Hoods
+
+Array = jax.Array
+
+
+class EnergyModel(NamedTuple):
+    """Static per-problem arrays consumed by the EM loop.
+
+    All gathers are sentinel-safe: region arrays are extended by one lane
+    (index n_regions) holding zeros.
+    """
+
+    region_mean: Array   # (V+1,) float32, sentinel 0
+    region_weight: Array # (V+1,) float32, unit-mean pixel counts, sentinel 0
+    beta: Array          # scalar float32 smoothness weight
+    sigma_min: Array     # scalar float32 lower bound on sigma
+    reseed_mu: Array     # (2,) float32 — q10/q90 of region means, used to
+                         # re-seed a label whose cluster dies during EM
+    reseed_sigma: Array  # scalar float32
+
+
+def make_energy_model(
+    region_mean, region_size, *, beta: float = 0.75, sigma_min: float = 2.0
+) -> EnergyModel:
+    y = jnp.asarray(region_mean, jnp.float32)
+    mean = jnp.concatenate([y, jnp.zeros((1,), jnp.float32)])
+    w = jnp.asarray(region_size, jnp.float32)
+    w = w / jnp.maximum(jnp.mean(w), 1e-6)
+    w = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+    return EnergyModel(
+        region_mean=mean,
+        region_weight=w,
+        beta=jnp.float32(beta),
+        sigma_min=jnp.float32(sigma_min),
+        reseed_mu=jnp.stack([jnp.quantile(y, 0.10), jnp.quantile(y, 0.90)]),
+        reseed_sigma=jnp.maximum(jnp.std(y) / 2.0, sigma_min),
+    )
+
+
+def label_energies(
+    hoods: Hoods,
+    model: EnergyModel,
+    labels: Array,
+    mu: Array,
+    sigma: Array,
+    hood_counts: Tuple[Array, Array] | None = None,
+) -> Array:
+    """Energies for both candidate labels, shape (2, H_pad).
+
+    ``labels`` is (V+1,) int32 (sentinel lane ignored via zero weight).
+    The Map DPP of the paper's "Compute Energy Function" step.
+
+    ``hood_counts`` optionally supplies the per-hood (label-1 count, size)
+    arrays — the distributed engine passes globally psum-reduced counts
+    here so shards see cross-shard neighborhood context.
+    """
+    v = hoods.vertex
+    y = model.region_mean[v]
+    w = model.region_weight[v] * hoods.valid.astype(jnp.float32)
+    x = labels[v]
+
+    sig = jnp.maximum(sigma, model.sigma_min)
+
+    def data_term(l: int) -> Array:
+        d = (y - mu[l])
+        return w * (d * d / (2.0 * sig[l] * sig[l]) + jnp.log(sig[l]))
+
+    # Per-hood label-1 counts (ReduceByKey) for the smoothness term.
+    if hood_counts is None:
+        ones = hoods.valid.astype(jnp.float32)
+        n1 = dpp.reduce_by_key(hoods.hood_id, ones * x, hoods.n_hoods + 1, op="add")
+        nall = dpp.reduce_by_key(hoods.hood_id, ones, hoods.n_hoods + 1, op="add")
+    else:
+        n1, nall = hood_counts
+    n1_e = n1[hoods.hood_id]
+    nall_e = nall[hoods.hood_id]
+    xf = x.astype(jnp.float32)
+
+    # Disagreement counts are normalized by the number of *other* elements
+    # in the neighborhood so beta is independent of hood size (hood sizes
+    # vary wildly across datasets — the paper's §4.3.3 demographics).
+    denom = jnp.maximum(nall_e - 1.0, 1.0)
+
+    def smooth_term(l: int) -> Array:
+        if l == 1:
+            others_diff = (nall_e - n1_e) - (1.0 - xf)
+        else:
+            others_diff = n1_e - xf
+        return model.beta * jnp.maximum(others_diff, 0.0) / denom * hoods.valid
+
+    e0 = data_term(0) + smooth_term(0)
+    e1 = data_term(1) + smooth_term(1)
+    return jnp.stack([e0, e1])
+
+
+# ---------------------------------------------------------------------------
+# Per-element label minimization — the two modes
+# ---------------------------------------------------------------------------
+
+
+def min_energies_static(energies: Array) -> Tuple[Array, Array]:
+    """(min_energy, argmin_label) per hood element — axis-min, no sort."""
+    min_e = jnp.min(energies, axis=0)
+    arg = jnp.argmin(energies, axis=0).astype(jnp.int32)
+    return min_e, arg
+
+
+def min_energies_faithful(hoods: Hoods, energies: Array) -> Tuple[Array, Array]:
+    """Paper-faithful: replicate to 2|hoods| lanes via the memory-free
+    Gather (oldIndex/testLabel), SortByKey so each element's two label
+    energies are adjacent, ReduceByKey(Min) per element."""
+    h_pad = hoods.capacity
+    rep_e = energies[hoods.rep_test_label, hoods.rep_old_index]
+    big = jnp.float32(3.4e38)
+    rep_e = jnp.where(hoods.rep_valid, rep_e, big)
+    rep_key = jnp.where(
+        hoods.rep_valid, hoods.rep_old_index, h_pad
+    ).astype(jnp.int32)
+
+    sk, se = dpp.sort_by_key(rep_key, rep_e)
+    min_e = dpp.reduce_by_key(
+        sk, se, h_pad + 1, op="min", indices_are_sorted=True
+    )[:h_pad]
+    min_e = jnp.where(hoods.valid, min_e, 0.0)
+    # Recover the argmin label: the min equals exactly one of the two label
+    # energies (ties resolve to label 0, matching argmin semantics).
+    arg = jnp.where(min_e == energies[0], 0, 1).astype(jnp.int32)
+    arg = jnp.where(hoods.valid, arg, 0)
+    return min_e, arg
+
+
+def hood_energy_sums(hoods: Hoods, min_e: Array) -> Array:
+    """ReduceByKey(Add) of per-element min energies -> per-hood sums."""
+    return dpp.reduce_by_key(
+        hoods.hood_id, jnp.where(hoods.valid, min_e, 0.0), hoods.n_hoods + 1, op="add"
+    )[: hoods.n_hoods]
+
+
+def vote_labels(hoods: Hoods, arg: Array, n_regions: int) -> Array:
+    """Update Output Labels (paper step 3's Scatter).
+
+    Deterministic adaptation: a vertex can belong to several neighborhoods
+    whose scatters race in the paper (it notes the resulting label noise in
+    §4.2.2); we resolve by majority vote via Scatter(add) of one-hot votes.
+    Returns (V+1,) labels with the sentinel lane forced to 0.
+    """
+    votes1 = dpp.scatter_(
+        jnp.where(hoods.valid, arg, 0).astype(jnp.float32),
+        hoods.vertex,
+        n_regions + 1,
+        mode="add",
+    )
+    votes_all = dpp.scatter_(
+        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1, mode="add"
+    )
+    new = (votes1 * 2.0 > votes_all).astype(jnp.int32)
+    return new.at[n_regions].set(0)
+
+
+def update_parameters(
+    model: EnergyModel, labels: Array, mode: str
+) -> Tuple[Array, Array]:
+    """M-step (paper step 4): per-label mu/sigma from weighted region stats.
+
+    faithful mode groups regions by SortByKey(label) + segmented reduce;
+    static mode uses labels directly as segment ids.  Identical math.
+    """
+    y = model.region_mean
+    w = model.region_weight  # sentinel lane has weight 0
+    lab = labels
+
+    if mode == "faithful":
+        sk, sy, sw = dpp.sort_by_key(lab, y, w)
+        seg = sk
+        sorted_flag = True
+    else:
+        seg, sy, sw = lab, y, w
+        sorted_flag = False
+
+    sum_w = dpp.reduce_by_key(seg, sw, 2, op="add", indices_are_sorted=sorted_flag)
+    sum_wy = dpp.reduce_by_key(seg, sw * sy, 2, op="add", indices_are_sorted=sorted_flag)
+    sum_wyy = dpp.reduce_by_key(seg, sw * sy * sy, 2, op="add", indices_are_sorted=sorted_flag)
+    safe_w = jnp.maximum(sum_w, 1e-6)
+    mu = sum_wy / safe_w
+    var = jnp.maximum(sum_wyy / safe_w - mu * mu, 0.0)
+    sigma = jnp.maximum(jnp.sqrt(var), model.sigma_min)
+
+    # Cluster-death re-seeding (EM robustness adaptation, DESIGN.md §8):
+    # a label that captured (almost) no mass is re-seeded at the far data
+    # quantile (label 0 -> q10, label 1 -> q90, matching the sorted-mu
+    # initialization convention) instead of collapsing to a degenerate
+    # Gaussian that can never recapture mass.
+    dead = sum_w < 1e-3 * jnp.sum(sum_w)
+    mu = jnp.where(dead, model.reseed_mu, mu)
+    sigma = jnp.where(dead, model.reseed_sigma, sigma)
+    return mu, sigma

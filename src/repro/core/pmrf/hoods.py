@@ -1,0 +1,203 @@
+"""k=1 neighborhood construction from maximal cliques (paper §3.2.2).
+
+Implements the paper's four data-parallel steps verbatim on top of the DPP
+layer:
+
+  1. **Find Neighbors** (Map): per clique-member slot, count 1-hop
+     neighbors that are not members of the slot's clique.
+  2. **Count Neighbors** (Scan): prefix-sum the counts to allocate the
+     neighborhoods array (static capacity computed host-side — the XLA
+     static-shape adaptation, DESIGN.md §2).
+  3. **Get Neighbors** (Map): populate candidate (cliqueId, vertexId)
+     elements via the expand idiom (Scatter + max-Scan + Gather).
+  4. **Remove Duplicate Neighbors** (SortByKey + Unique): sort candidates
+     by (cliqueId, vertexId) compound key, drop adjacent duplicates.
+
+It also builds the paper's label-replication index arrays (testLabel,
+oldIndex, hoodId — the "repHoods" simulated, memory-free Gather).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpp
+from repro.core.pmrf.cliques import CliqueSet
+from repro.core.pmrf.graph import RegionGraph
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class Hoods:
+    """Flat neighborhood arrays (static-shape padded).
+
+    Padding lanes carry ``vertex == n_regions`` / ``hood_id == n_hoods`` so
+    gathers stay in-bounds against sentinel-extended region arrays.
+    """
+
+    vertex: jnp.ndarray        # (H_pad,) int32 — vertex id per hood element
+    hood_id: jnp.ndarray       # (H_pad,) int32 — neighborhood id per element
+    valid: jnp.ndarray         # (H_pad,) bool
+    sizes: jnp.ndarray         # (n_hoods,) int32
+    offsets: jnp.ndarray       # (n_hoods + 1,) int32 (over the packed prefix)
+    n_hoods: int = field(metadata=dict(static=True))
+    n_regions: int = field(metadata=dict(static=True))
+    n_elements: int = field(metadata=dict(static=True))  # valid-element count
+    # Label-replication arrays (paper layout: per hood, label-0 block then
+    # label-1 block), each (2 * H_pad,):
+    rep_old_index: jnp.ndarray
+    rep_test_label: jnp.ndarray
+    rep_hood_id: jnp.ndarray
+    rep_valid: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return int(self.vertex.shape[0])
+
+
+def build_hoods(graph: RegionGraph, cliques: CliqueSet) -> Hoods:
+    n = graph.n_regions
+    c = cliques.n_cliques
+    w = cliques.width
+    if c == 0:
+        raise ValueError("no cliques — empty graph?")
+
+    members = jnp.asarray(cliques.members)            # (C, W)
+    members_flat = members.reshape(-1)                # (C*W,)
+    clique_of_slot = jnp.repeat(jnp.arange(c, dtype=jnp.int32), w)
+    valid_slot = members_flat >= 0
+    n_slots = c * w
+
+    offsets = jnp.asarray(graph.csr_offsets)
+    neighbors = jnp.asarray(graph.csr_neighbors)
+    deg = offsets[1:] - offsets[:-1]
+
+    safe_member = jnp.where(valid_slot, members_flat, 0)
+
+    # -- Step 1: Find Neighbors (Map) — per-slot neighbor counts. ----------
+    slot_counts = jnp.where(valid_slot, deg[safe_member], 0).astype(jnp.int32)
+
+    # -- Step 2: Count Neighbors (Scan) — allocate candidates array. -------
+    # Static capacity: all neighbor slots + the clique members themselves.
+    neighbor_capacity = int(np.asarray(jnp.sum(slot_counts)))
+    total_capacity = neighbor_capacity + n_slots
+
+    # -- Step 3: Get Neighbors (Map over expanded lanes). ------------------
+    src_slot, rank = dpp.expand_with_rank(slot_counts, neighbor_capacity)
+    lane_valid = src_slot < n_slots
+    safe_slot = jnp.minimum(src_slot, n_slots - 1)
+    v = safe_member[safe_slot]
+    nb = neighbors[jnp.minimum(offsets[v] + rank, neighbors.shape[0] - 1)]
+    cid = clique_of_slot[safe_slot]
+    # Exclude neighbors that are members of the same clique (paper step 1's
+    # "not a member of the vertex's maximal clique" filter).
+    nb_in_clique = jnp.any(members[cid] == nb[:, None], axis=1)
+    cand_valid_nb = lane_valid & ~nb_in_clique
+
+    # Clique members are hood elements too (hood = clique U 1-hop neighbors).
+    member_keys_cid = clique_of_slot
+    member_keys_v = safe_member
+
+    span = n + 1
+    sentinel = c * span + n  # decodes to (hood_id=c, vertex=n)
+
+    key_nb = jnp.where(
+        cand_valid_nb, cid.astype(jnp.int64) * span + nb, sentinel
+    )
+    key_mem = jnp.where(
+        valid_slot, member_keys_cid.astype(jnp.int64) * span + member_keys_v, sentinel
+    )
+    keys = jnp.concatenate([key_mem, key_nb])  # (total_capacity,)
+
+    # -- Step 4: Remove Duplicate Neighbors (SortByKey + Unique). ----------
+    (sorted_keys,) = dpp.sort_by_key(keys)
+    uniq, count = dpp.unique_(sorted_keys, fill=sentinel)
+    # Padding lanes of unique_ carry ``fill``; also drop the sentinel itself
+    # if it survived as a "unique" value.
+    lane = jnp.arange(uniq.shape[0])
+    uniq = jnp.where((lane < count) & (uniq != sentinel), uniq, sentinel)
+
+    hood_id = (uniq // span).astype(jnp.int32)
+    vertex = (uniq % span).astype(jnp.int32)
+    valid = uniq != sentinel
+
+    sizes = dpp.reduce_by_key(
+        jnp.where(valid, hood_id, c),
+        valid.astype(jnp.int32),
+        c + 1,
+        op="add",
+    )[:c]
+    hood_offsets = dpp.counts_to_offsets(sizes)
+    n_elements = int(np.asarray(jnp.sum(valid.astype(jnp.int32))))
+
+    # -- Replication by label (paper: Map + Scan + Gather, memory-free). ---
+    h_pad = int(vertex.shape[0])
+    rep = _build_replication(hood_id, valid, sizes, hood_offsets, c, h_pad)
+
+    return Hoods(
+        vertex=vertex,
+        hood_id=jnp.where(valid, hood_id, c),
+        valid=valid,
+        sizes=sizes,
+        offsets=hood_offsets,
+        n_hoods=c,
+        n_regions=n,
+        n_elements=n_elements,
+        rep_old_index=rep[0],
+        rep_test_label=rep[1],
+        rep_hood_id=rep[2],
+        rep_valid=rep[3],
+    )
+
+
+def _build_replication(
+    hood_id: jnp.ndarray,
+    valid: jnp.ndarray,
+    sizes: jnp.ndarray,
+    hood_offsets: jnp.ndarray,
+    n_hoods: int,
+    h_pad: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper's testLabel / oldIndex / hoodId arrays of size 2*|hoods|.
+
+    Layout per neighborhood h with size s and packed offset o:
+    lanes [2o, 2o+s) replicate h's elements with testLabel=0 and lanes
+    [2o+s, 2o+2s) with testLabel=1 — exactly the worked example in §3.2.2.
+
+    Because the packed (valid-only) element order may differ from the padded
+    storage order, oldIndex points into the *packed* order; we therefore
+    also need the packed->padded map, folded in here so rep_old_index
+    indexes the padded arrays directly.
+    """
+    # Packed position of each padded lane (exclusive scan of valid flags).
+    vi = valid.astype(jnp.int32)
+    packed_pos = (jnp.cumsum(vi) - vi).astype(jnp.int32)
+    # padded index of each packed element:
+    pad_of_packed = dpp.scatter_(
+        jnp.arange(h_pad, dtype=jnp.int32), packed_pos, h_pad, mode="set",
+        fill=h_pad - 1, mask=valid,
+    )
+
+    rep_counts = (2 * sizes).astype(jnp.int32)
+    total = 2 * h_pad
+    rep_hood, rep_rank = dpp.expand_with_rank(rep_counts, total)
+    rep_lane_valid = rep_hood < n_hoods
+    safe_hood = jnp.minimum(rep_hood, n_hoods - 1)
+    s = sizes[safe_hood]
+    o = hood_offsets[safe_hood]
+    test_label = jnp.where(rep_rank >= s, 1, 0).astype(jnp.int32)
+    packed_idx = o + jnp.where(rep_rank >= s, rep_rank - s, rep_rank)
+    packed_idx = jnp.minimum(packed_idx, h_pad - 1)
+    old_index = pad_of_packed[packed_idx]
+    return (
+        jnp.where(rep_lane_valid, old_index, h_pad - 1).astype(jnp.int32),
+        jnp.where(rep_lane_valid, test_label, 0),
+        jnp.where(rep_lane_valid, rep_hood, n_hoods).astype(jnp.int32),
+        rep_lane_valid,
+    )

@@ -1,0 +1,213 @@
+"""Reference implementations the paper compares against (§4.1.4, §4.3):
+
+* ``serial_em``   — the serial baseline: plain-Python/numpy loops over
+  neighborhoods with per-element inner loops, the "Serial CPU" row of
+  paper Table 1.
+* ``coarse_em``   — the OpenMP-analogue PMRF: *outer* parallelism over
+  neighborhoods (each neighborhood's optimization is one task, vectorized
+  per-neighborhood like a single OpenMP thread's work), with NO inner
+  fine-grained parallelism and the ragged per-neighborhood memory layout
+  the paper attributes the OpenMP code's cache behaviour to.
+
+Both compute the same energies/updates as the DPP engine (numerically
+equal labels given the same schedule), so runtime ratios isolate the
+execution model — the paper's experimental design.
+
+On this container there is one core, so ``coarse_em`` measures the
+coarse-grained formulation at concurrency 1 (the paper's p=1 column);
+the DPP-vs-reference ratio at p=1 is reported in bench_fig3.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.pmrf.energy import EnergyModel
+from repro.core.pmrf.hoods import Hoods
+
+WINDOW = 3
+CONV_TOL = 1.0e-4
+
+
+@dataclass
+class RefResult:
+    labels: np.ndarray
+    mu: np.ndarray
+    sigma: np.ndarray
+    em_iters: int
+    map_iters: int
+    total_energy: float
+    seconds: float
+
+
+def _ragged_hoods(hoods: Hoods) -> List[np.ndarray]:
+    """The reference ragged-array layout: one row of vertex ids per
+    neighborhood (the OpenMP code's data structure)."""
+    vertex = np.asarray(hoods.vertex)
+    hood_id = np.asarray(hoods.hood_id)
+    valid = np.asarray(hoods.valid)
+    rows: List[np.ndarray] = [
+        vertex[(hood_id == h) & valid] for h in range(hoods.n_hoods)
+    ]
+    return rows
+
+
+def _label_energy_vertex(
+    y: float, w: float, label: int, mu, sigma, n_diff: float, denom: float, beta: float
+) -> float:
+    d = y - mu[label]
+    data = w * (d * d / (2.0 * sigma[label] * sigma[label]) + np.log(sigma[label]))
+    return data + beta * max(n_diff, 0.0) / denom
+
+
+def _em_generic(
+    hoods: Hoods,
+    model: EnergyModel,
+    labels0: np.ndarray,
+    mu0: np.ndarray,
+    sigma0: np.ndarray,
+    *,
+    mode: str,                     # "serial" | "coarse"
+    max_em_iters: int = 20,
+    max_map_iters: int = 10,
+) -> RefResult:
+    rows = _ragged_hoods(hoods)
+    y_all = np.asarray(model.region_mean)
+    w_all = np.asarray(model.region_weight)
+    beta = float(model.beta)
+    sig_min = float(model.sigma_min)
+    reseed_mu = np.asarray(model.reseed_mu)
+    reseed_sigma = float(model.reseed_sigma)
+    n_regions = hoods.n_regions
+
+    labels = np.asarray(labels0).copy()
+    mu = np.asarray(mu0, np.float64).copy()
+    sigma = np.asarray(sigma0, np.float64).copy()
+
+    t0 = time.perf_counter()
+    em_iters = 0
+    map_total = 0
+    hood_e = np.zeros(len(rows), np.float64)
+    total_hist = np.zeros(WINDOW + 1, np.float64)
+
+    for em in range(max_em_iters):
+        em_iters += 1
+        hist = np.zeros((WINDOW + 1, len(rows)), np.float64)
+
+        for it in range(max_map_iters):
+            map_total += 1
+            votes1 = np.zeros(n_regions + 1, np.float64)
+            votes_all = np.zeros(n_regions + 1, np.float64)
+            sig = np.maximum(sigma, sig_min)
+
+            if mode == "serial":
+                # fully serial: explicit python loop over rows AND elements
+                for h, row in enumerate(rows):
+                    if len(row) == 0:
+                        hood_e[h] = 0.0
+                        continue
+                    x_row = labels[row]
+                    n1 = float(x_row.sum())
+                    nall = float(len(row))
+                    denom = max(nall - 1.0, 1.0)
+                    esum = 0.0
+                    for j, v in enumerate(row):
+                        yv, wv, xv = float(y_all[v]), float(w_all[v]), int(x_row[j])
+                        e0 = _label_energy_vertex(
+                            yv, wv, 0, mu, sig, n1 - xv, denom, beta
+                        )
+                        e1 = _label_energy_vertex(
+                            yv, wv, 1, mu, sig, (nall - n1) - (1 - xv), denom, beta
+                        )
+                        if e0 <= e1:
+                            esum += e0
+                        else:
+                            esum += e1
+                            votes1[v] += 1.0
+                        votes_all[v] += 1.0
+                    hood_e[h] = esum
+            else:
+                # coarse outer-parallel: per-neighborhood vectorized numpy
+                # (one OpenMP task's work), python loop over neighborhoods
+                for h, row in enumerate(rows):
+                    if len(row) == 0:
+                        hood_e[h] = 0.0
+                        continue
+                    yv = y_all[row]
+                    wv = w_all[row]
+                    xv = labels[row].astype(np.float64)
+                    n1 = xv.sum()
+                    nall = float(len(row))
+                    denom = max(nall - 1.0, 1.0)
+                    d0 = yv - mu[0]
+                    d1 = yv - mu[1]
+                    e0 = wv * (d0 * d0 / (2 * sig[0] * sig[0]) + np.log(sig[0])) \
+                        + beta * np.maximum(n1 - xv, 0.0) / denom
+                    e1 = wv * (d1 * d1 / (2 * sig[1] * sig[1]) + np.log(sig[1])) \
+                        + beta * np.maximum((nall - n1) - (1 - xv), 0.0) / denom
+                    pick1 = e1 < e0
+                    hood_e[h] = np.where(pick1, e1, e0).sum()
+                    np.add.at(votes1, row, pick1.astype(np.float64))
+                    np.add.at(votes_all, row, 1.0)
+
+            labels = (votes1 * 2.0 > votes_all).astype(np.int32)
+            labels = np.concatenate([labels[:n_regions], [0]])
+            hist = np.roll(hist, 1, axis=0)
+            hist[0] = hood_e
+            if it > WINDOW:
+                deltas = np.abs(hist[:-1] - hist[1:])
+                scale = np.maximum(np.abs(hist[0]), 1.0)
+                if (deltas < CONV_TOL * scale).all():
+                    break
+
+        # M-step
+        w_eff = w_all[:-1]
+        y_eff = y_all[:-1]
+        lab_eff = labels[:n_regions]
+        for l in (0, 1):
+            sel = lab_eff == l
+            sw = float(w_eff[sel].sum())
+            if sw < 1e-3 * float(w_eff.sum()):
+                mu[l] = reseed_mu[l]
+                sigma[l] = reseed_sigma
+                continue
+            mu[l] = float((w_eff[sel] * y_eff[sel]).sum()) / sw
+            var = float((w_eff[sel] * (y_eff[sel] - mu[l]) ** 2).sum()) / sw
+            sigma[l] = max(np.sqrt(var), sig_min)
+
+        total = float(hood_e.sum())
+        total_hist = np.roll(total_hist, 1)
+        total_hist[0] = total
+        if em > WINDOW:
+            deltas = np.abs(total_hist[:-1] - total_hist[1:])
+            scale = max(abs(total_hist[0]), 1.0)
+            if (deltas < CONV_TOL * scale).all():
+                break
+
+    return RefResult(
+        labels=labels,
+        mu=mu.astype(np.float32),
+        sigma=sigma.astype(np.float32),
+        em_iters=em_iters,
+        map_iters=map_total,
+        total_energy=float(hood_e.sum()),
+        seconds=time.perf_counter() - t0,
+    )
+
+
+def serial_em(hoods, model, labels0, mu0, sigma0, **kw) -> RefResult:
+    return _em_generic(
+        hoods, model, np.asarray(labels0), np.asarray(mu0), np.asarray(sigma0),
+        mode="serial", **kw,
+    )
+
+
+def coarse_em(hoods, model, labels0, mu0, sigma0, **kw) -> RefResult:
+    return _em_generic(
+        hoods, model, np.asarray(labels0), np.asarray(mu0), np.asarray(sigma0),
+        mode="coarse", **kw,
+    )

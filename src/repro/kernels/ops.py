@@ -1,0 +1,86 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Each op chooses between the Pallas kernel (TPU target; interpret mode on
+CPU for validation) and the pure-jnp reference, based on the backend or an
+explicit override.  Library code calls these wrappers, never the kernels
+directly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mrf_energy import mrf_min_energy_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+Array = jax.Array
+
+
+def _use_pallas(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    # Pallas compiled path only on TPU; CPU defaults to the reference
+    # (interpret mode is for tests — far too slow for production CPU use).
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_reduce(
+    values: Array,
+    segment_ids: Array,
+    num_segments: int,
+    op: str = "add",
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    if _use_pallas(use_pallas):
+        return segment_reduce_pallas(
+            values, segment_ids, num_segments, op, interpret=_interpret()
+        )
+    return ref.segment_reduce(values, segment_ids, num_segments, op)
+
+
+def mrf_min_energy(
+    y: Array,
+    w: Array,
+    n1_e: Array,
+    nall_e: Array,
+    xf: Array,
+    mu: Array,
+    sigma: Array,
+    beta,
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    if _use_pallas(use_pallas):
+        return mrf_min_energy_pallas(
+            y, w, n1_e, nall_e, xf, mu, sigma, beta, interpret=_interpret()
+        )
+    return ref.mrf_min_energy(y, w, n1_e, nall_e, xf, mu, sigma, beta)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    use_pallas: Optional[bool] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> Array:
+    if _use_pallas(use_pallas):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=_interpret(),
+        )
+    return ref.flash_attention(q, k, v, causal=causal, scale=scale)

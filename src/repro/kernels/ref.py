@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against
+(assert_allclose over shapes/dtypes), and the dispatch fallback used by
+``ops.py`` when Pallas is not wanted (e.g. eager CPU paths).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def segment_reduce(
+    values: Array, segment_ids: Array, num_segments: int, op: str = "add"
+) -> Array:
+    """ReduceByKey oracle: jax.ops.segment_* over a 1D value array."""
+    if op == "add":
+        return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
+    raise ValueError(op)
+
+
+def mrf_min_energy(
+    y: Array,
+    w: Array,
+    n1_e: Array,
+    nall_e: Array,
+    xf: Array,
+    mu: Array,
+    sigma: Array,
+    beta: Array | float,
+) -> Tuple[Array, Array]:
+    """Fused MRF energy + per-element 2-label min (oracle).
+
+    Mirrors ``repro.core.pmrf.energy.label_energies`` +
+    ``min_energies_static`` for the binary-label case, on pre-gathered
+    per-element arrays.
+    """
+    denom = jnp.maximum(nall_e - 1.0, 1.0)
+
+    def energy(l):
+        d = y - mu[l]
+        data = w * (d * d / (2.0 * sigma[l] * sigma[l]) + jnp.log(sigma[l]))
+        if l == 1:
+            diff = (nall_e - n1_e) - (1.0 - xf)
+        else:
+            diff = n1_e - xf
+        return data + beta * jnp.maximum(diff, 0.0) / denom
+
+    e0, e1 = energy(0), energy(1)
+    min_e = jnp.minimum(e0, e1)
+    arg = (e1 < e0).astype(jnp.int32)
+    return min_e, arg
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *, causal: bool = False, scale: float | None = None
+) -> Array:
+    """Attention oracle: naive softmax(QK^T)V with GQA head mapping.
+
+    q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh construction, the multi-pod dry-run, and the
+train / serve / segment drivers."""

@@ -1,0 +1,621 @@
+"""Loop-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers program underreports flops/bytes/collectives by ~L
+(verified in tests/test_dryrun.py).  This module parses the compiled HLO
+and computes:
+
+* **flops** — 2·prod(result)·prod(contracted) per dot (+1 flop/element for
+  arithmetic elementwise ops, inside fusions too), scaled by every
+  enclosing while's trip count (XLA annotates ``known_trip_count``);
+* **hbm_bytes** — Σ (operand + result bytes) over *top-level* instructions
+  (fusion = one instruction: its internals live in registers/VMEM, so the
+  fusion boundary is the HBM-traffic boundary), loop-scaled;
+* **collective bytes by op** — operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, loop-scaled (async
+  ``-start``/``-done`` pairs counted once).
+
+The parse is intentionally tolerant: unknown ops cost 0 flops and their
+operand/result bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "logistic", "cosine", "sine",
+    "select", "compare", "and", "or", "xor", "not", "clamp", "atan2",
+    "remainder", "exponential-minus-one", "log-plus-one", "erf",
+}
+
+_NO_BYTES = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+def _elems_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    result_text: str          # type text before the opcode
+    opcode: str
+    args_text: str            # inside the op's parens
+    attrs_text: str           # after the closing paren
+    operands: List[str]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    param_shapes: Dict[str, str]  # param name -> type text
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    flash_bytes: float = 0.0   # subset of hbm_bytes inside chunked_attention
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+    dot_flops_by_shape: Dict[str, float] = field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.flash_bytes += other.flash_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+        for k, v in other.dot_flops_by_shape.items():
+            self.dot_flops_by_shape[k] = (
+                self.dot_flops_by_shape.get(k, 0.0) + v * mult
+            )
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+
+    @property
+    def coll_total_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_top_level(text: str) -> List[str]:
+    """Split on commas not nested inside (), [], or {}."""
+    parts, depth, buf = [], 0, []
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        parts.append("".join(buf))
+    return parts
+
+
+def _balanced(text: str, start: int) -> Tuple[str, int]:
+    """Content of the paren group opening at ``start`` ('('), and end idx."""
+    depth = 0
+    buf: List[str] = []
+    for j in range(start, len(text)):
+        ch = text[j]
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return "".join(buf), j
+        buf.append(ch)
+    return "".join(buf), len(text)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                stripped = line.strip()
+                m = _COMP_HDR.match(stripped)
+                if m and "->" in stripped:
+                    params_text, _ = _balanced(stripped, m.end() - 1)
+                    params = {}
+                    for p in _split_top_level(params_text):
+                        p = p.strip()
+                        if not p or ":" not in p:
+                            continue
+                        pname, ptype = p.split(":", 1)
+                        params[pname.strip().lstrip("%")] = ptype.strip()
+                    cur = Computation(m.group(2), [], params)
+                    if m.group(1):
+                        entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        rhs = im.group(3)
+        # split result-type text from opcode: opcode is the first token
+        # after the type(s); find "op(" with the op name directly before "("
+        opm = re.search(r"([a-zA-Z][\w\-]*)\(", rhs)
+        if opm is None:
+            continue
+        opcode = opm.group(1)
+        result_text = rhs[: opm.start()]
+        # extract args inside balanced parens
+        depth = 0
+        args_chars: List[str] = []
+        i = opm.end() - 1
+        for j in range(i, len(rhs)):
+            ch = rhs[j]
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    attrs = rhs[j + 1:]
+                    break
+            args_chars.append(ch)
+        else:
+            attrs = ""
+        args_text = "".join(args_chars)
+        operands = re.findall(r"%([\w.\-]+)", args_text)
+        cur.instrs.append(
+            Instr(
+                name=im.group(2),
+                result_text=result_text,
+                opcode=opcode,
+                args_text=args_text,
+                attrs_text=attrs,
+                operands=operands,
+            )
+        )
+    return comps, entry
+
+
+def _flash_frame_ids(text: str) -> set:
+    """Stack-frame ids whose call chain passes through the portable flash
+    attention (``chunked_attention`` / ``_local_flash``) — used to bucket
+    HBM bytes that a Pallas kernel would keep in VMEM."""
+    fn_names: Dict[int, str] = {}
+    file_locs: Dict[int, int] = {}     # location id -> function name id
+    frames: Dict[int, Tuple[int, int]] = {}  # frame id -> (loc id, parent)
+    section = None
+    for ln in text.splitlines():
+        s = ln.strip()
+        if s in ("FunctionNames", "FileLocations", "StackFrames", "FileNames"):
+            section = s
+            continue
+        if not s:
+            if section:
+                section = None
+            continue
+        if section == "FunctionNames":
+            m = re.match(r'(\d+)\s+"(.*)"$', s)
+            if m:
+                fn_names[int(m.group(1))] = m.group(2)
+        elif section == "FileLocations":
+            m = re.match(r"(\d+)\s+\{.*function_name_id=(\d+)", s)
+            if m:
+                file_locs[int(m.group(1))] = int(m.group(2))
+        elif section == "StackFrames":
+            m = re.match(
+                r"(\d+)\s+\{file_location_id=(\d+)(?:\s+parent_frame_id=(\d+))?",
+                s,
+            )
+            if m:
+                frames[int(m.group(1))] = (
+                    int(m.group(2)),
+                    int(m.group(3)) if m.group(3) else 0,
+                )
+    flash: set = set()
+    for fid in frames:
+        cur, hops = fid, 0
+        while cur and hops < 64:
+            loc, parent = frames.get(cur, (0, 0))
+            name = fn_names.get(file_locs.get(loc, -1), "")
+            if any(name.startswith(f) for f in _FLASH_FUNCS):
+                flash.add(fid)
+                break
+            if parent == cur:
+                break
+            cur, hops = parent, hops + 1
+    return flash
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.attrs_text)
+    if m:
+        return float(m.group(1))
+    # fallback: largest s32 constant in the condition computation
+    cm = re.search(r"condition=%?([\w.\-]+)", instr.attrs_text)
+    if cm and cm.group(1) in comps:
+        best = 0
+        for ins in comps[cm.group(1)].instrs:
+            if ins.opcode == "constant":
+                c = re.search(r"constant\((\d+)\)", "constant(" + ins.args_text + ")")
+                if c:
+                    best = max(best, int(c.group(1)))
+        if best:
+            return float(best)
+    return 1.0
+
+
+_FLASH_FUNCS = ("chunked_attention", "_local_flash", "_chunk_intra")
+_KERNEL_SCOPES = ("flash_inner", "ssd_inner")
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[Tuple[str, bool], CostTotals] = {}
+        self.flash_frames = _flash_frame_ids(text)
+        self._flash_names = self._tag_flash()
+
+    def _scope_flash(self, instr: Instr) -> bool:
+        # the explicit kernel named_scopes survive jvp / transpose in
+        # op_name; fallback: source stack frames.
+        if any(s in instr.attrs_text for s in _KERNEL_SCOPES):
+            return True
+        m = re.search(r"stack_frame_id=(\d+)", instr.attrs_text)
+        return bool(m) and int(m.group(1)) in self.flash_frames
+
+    def _tag_flash(self) -> Dict[str, set]:
+        """Per-computation sets of flash-internal instruction names.
+
+        Seed: scope/frame-tagged instructions.  XLA strips metadata from
+        many backward-pass dots/copies, so tags propagate through the
+        def-use graph — but only across tensors at least as large as the
+        smallest big tagged score tensor (ordinary activations stay out).
+        """
+        out: Dict[str, set] = {}
+        for cname, comp in self.comps.items():
+            tagged = {i.name for i in comp.instrs if self._scope_flash(i)}
+            if tagged:
+                sizes = [
+                    _bytes_of(_shape_list(i.result_text))
+                    for i in comp.instrs
+                    if i.name in tagged
+                ]
+                big = [s for s in sizes if s >= 2 ** 28]  # >= 256 MiB
+                if big:
+                    thresh = 0.8 * min(big)
+                    by_name = {i.name: i for i in comp.instrs}
+                    changed = True
+                    while changed:
+                        changed = False
+                        for i in comp.instrs:
+                            if i.name in tagged:
+                                continue
+                            if _bytes_of(_shape_list(i.result_text)) < thresh:
+                                continue
+                            fwd = any(o in tagged for o in i.operands)
+                            bwd = any(
+                                i.name in by_name[t].operands
+                                for t in tagged
+                                if t in by_name
+                            )
+                            if fwd or bwd:
+                                tagged.add(i.name)
+                                changed = True
+            out[cname] = tagged
+        return out
+
+    def _is_flash(self, instr: Instr, comp_name: str = "") -> bool:
+        names = self._flash_names.get(comp_name)
+        if names is not None and instr.name in names:
+            return True
+        return self._scope_flash(instr)
+
+    # -- shape helpers ------------------------------------------------------
+
+    def _operand_shapes_text(self, comp: Computation, instr: Instr) -> str:
+        """Concatenated type texts of the instruction's operands."""
+        # inline types first
+        inline = _SHAPE_RE.findall(instr.args_text)
+        if inline:
+            return instr.args_text
+        texts = []
+        local = {i.name: i.result_text for i in comp.instrs}
+        for op in instr.operands:
+            if op in local:
+                texts.append(local[op])
+            elif op in comp.param_shapes:
+                texts.append(comp.param_shapes[op])
+        return " ".join(texts)
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        result = _shape_list(instr.result_text)
+        if not result:
+            return 0.0
+        out_elems = _elems_of(result[:1])
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs_text)
+        if not m:
+            return 2.0 * out_elems  # degenerate
+        cdims = [int(d) for d in m.group(1).split(",") if d]
+        # lhs shape = first operand
+        local = {i.name: i.result_text for i in comp.instrs}
+        lhs_text = None
+        inline = _shape_list(instr.args_text)
+        if inline:
+            lhs_text = instr.args_text.split(",")[0]
+        elif instr.operands:
+            op = instr.operands[0]
+            lhs_text = local.get(op) or comp.param_shapes.get(op)
+        if lhs_text is None:
+            return 2.0 * out_elems
+        lhs = _shape_list(lhs_text)
+        if not lhs:
+            return 2.0 * out_elems
+        k = 1
+        for d in cdims:
+            if d < len(lhs[0][1]):
+                k *= lhs[0][1][d]
+        return 2.0 * out_elems * k
+
+    def _instr_bytes(self, comp: Computation, instr: Instr) -> float:
+        """HBM traffic of one top-level instruction.
+
+        General case: Σ operand bytes + result bytes.  In-place slicing is
+        special-cased (XLA aliases the big buffer):
+
+        * dynamic-update-slice (op or fusion root): traffic = read update +
+          write slice = 2 x (operands minus the aliased buffer);
+        * dynamic-slice (op or fusion root): traffic = read slice + write
+          result = 2 x result;
+        * fusion operands consumed *only* by dynamic-slice ops inside the
+          fused body (the loop-stash-read pattern) are charged at the slice
+          size, not the full-buffer size.
+        """
+        result_b = _bytes_of(_shape_list(instr.result_text))
+        tag = instr.name + " " + instr.opcode
+        if "dynamic-update-slice" in tag:
+            opnds = [
+                _bytes_of(_shape_list(t))
+                for t in self._operand_shape_texts(comp, instr)
+            ]
+            if opnds:
+                big = max(opnds)
+                return 2.0 * max(sum(opnds) - big, 0)
+            return result_b
+        if "dynamic-slice" in tag:
+            return 2.0 * result_b
+        if instr.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", instr.attrs_text)
+            called = self.comps.get(m.group(1)) if m else None
+            if called is not None:
+                return self._fusion_operand_bytes(comp, instr, called) + result_b
+        opnd_text = self._operand_shapes_text(comp, instr)
+        return _bytes_of(_shape_list(opnd_text)) + result_b
+
+    def _fusion_operand_bytes(
+        self, comp: Computation, instr: Instr, called: Computation
+    ) -> float:
+        """Operand traffic of a fusion: params only dynamic-sliced inside
+        the body are charged at slice size."""
+        # positional param name list, in declaration order
+        param_instrs: Dict[int, str] = {}
+        for ins in called.instrs:
+            if ins.opcode == "parameter":
+                pm = re.match(r"\s*(\d+)", ins.args_text)
+                if pm:
+                    param_instrs[int(pm.group(1))] = ins.name
+        opnd_texts = self._operand_shape_texts(comp, instr)
+
+        def read_size(vname: str, full: float, depth: int = 0) -> float:
+            """Bytes actually read through ``vname``: dynamic-slice
+            consumers read their result; layout-only ops pass through;
+            anything else reads the full value."""
+            if depth > 8:
+                return full
+            consumers = [c for c in called.instrs if vname in c.operands]
+            if not consumers:
+                return full
+            total = 0.0
+            for c in consumers:
+                if c.opcode == "dynamic-slice":
+                    total += _bytes_of(_shape_list(c.result_text))
+                elif c.opcode in ("bitcast", "reshape", "copy", "transpose"):
+                    total += read_size(c.name, full, depth + 1)
+                else:
+                    return full
+            return min(total, full)
+
+        total = 0.0
+        for i, text in enumerate(opnd_texts):
+            full = _bytes_of(_shape_list(text))
+            pname = param_instrs.get(i)
+            total += full if pname is None else read_size(pname, full)
+        return total
+
+    def _operand_shape_texts(self, comp: Computation, instr: Instr) -> List[str]:
+        local = {i.name: i.result_text for i in comp.instrs}
+        out = []
+        for op in instr.operands:
+            if op in local:
+                out.append(local[op])
+            elif op in comp.param_shapes:
+                out.append(comp.param_shapes[op])
+        if not out and _SHAPE_RE.search(instr.args_text):
+            out = [instr.args_text]
+        return out
+
+    # -- computation cost ----------------------------------------------------
+
+    def comp_cost(self, name: str, top_level: bool) -> CostTotals:
+        """Cost of one execution of computation ``name``.
+
+        ``top_level``: bytes are charged here (fusion-internal computations
+        pass False — their data lives on-chip)."""
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        comp = self.comps.get(name)
+        if comp is None:
+            self._memo[key] = total
+            return total
+        for instr in comp.instrs:
+            op = instr.opcode
+            result = _shape_list(instr.result_text)
+
+            if op == "while":
+                trips = _trip_count(instr, self.comps)
+                bm = re.search(r"body=%?([\w.\-]+)", instr.attrs_text)
+                cm = re.search(r"condition=%?([\w.\-]+)", instr.attrs_text)
+                if bm:
+                    total.add(self.comp_cost(bm.group(1), top_level), trips)
+                if cm:
+                    total.add(self.comp_cost(cm.group(1), top_level), trips)
+                continue
+
+            if op in ("fusion", "call", "async-start"):
+                m = re.search(r"(?:calls|to_apply|called_computation)=%?([\w.\-]+)", instr.attrs_text)
+                if m:
+                    # a bare `call` is control flow: its body's instructions
+                    # are top-level (they charge their own bytes); a fusion
+                    # body lives on-chip (bytes charged at the boundary).
+                    inner_top = top_level if op == "call" else False
+                    total.add(self.comp_cost(m.group(1), inner_top), 1.0)
+                if top_level and op == "fusion":
+                    b = self._instr_bytes(comp, instr)
+                    total.hbm_bytes += b
+                    if self._is_flash(instr, name):
+                        total.flash_bytes += b
+                    total.bytes_by_op[op] = total.bytes_by_op.get(op, 0.0) + b
+                continue
+
+            if op == "conditional":
+                # charge the max-cost branch (upper bound)
+                branches = re.findall(
+                    r"(?:true_computation|false_computation|branch_computations)=?\{?%?([\w.\-]+)",
+                    instr.attrs_text,
+                )
+                if branches:
+                    costs = [self.comp_cost(b, top_level) for b in branches]
+                    best = max(costs, key=lambda c: c.flops + c.hbm_bytes)
+                    total.add(best, 1.0)
+                continue
+
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                opnd_text = self._operand_shapes_text(comp, instr)
+                nbytes = _bytes_of(_shape_list(opnd_text))
+                if nbytes == 0:
+                    nbytes = _bytes_of(result)
+                total.coll_bytes[base] = total.coll_bytes.get(base, 0.0) + nbytes
+                total.coll_count[base] = total.coll_count.get(base, 0.0) + 1
+                if top_level:
+                    b = nbytes + _bytes_of(result)
+                    total.hbm_bytes += b
+                    total.bytes_by_op[base] = total.bytes_by_op.get(base, 0.0) + b
+                continue
+
+            if op == "dot":
+                f = self._dot_flops(comp, instr)
+                total.flops += f
+                shape_key = instr.result_text.strip()
+                total.dot_flops_by_shape[shape_key] = (
+                    total.dot_flops_by_shape.get(shape_key, 0.0) + f
+                )
+            elif op == "convolution":
+                # flops ~= 2 * out_elems * (in_ch * prod(kernel_spatial));
+                # approximate via operand-1 (kernel) size / out_features
+                out_elems = _elems_of(result[:1])
+                opnd = _shape_list(self._operand_shapes_text(comp, instr))
+                kernel = opnd[1][1] if len(opnd) > 1 else []
+                kprod = 1
+                for d in kernel:
+                    kprod *= d
+                ofeat = result[0][1][-1] if result and result[0][1] else 1
+                total.flops += 2.0 * out_elems * max(kprod // max(ofeat, 1), 1)
+            elif op in _ELEMENTWISE:
+                total.flops += _elems_of(result[:1])
+            elif op in ("reduce", "reduce-window"):
+                opnd = _shape_list(self._operand_shapes_text(comp, instr))
+                total.flops += _elems_of(opnd[:1])
+
+            if top_level and op not in _NO_BYTES:
+                b = self._instr_bytes(comp, instr)
+                total.hbm_bytes += b
+                if self._is_flash(instr, name):
+                    total.flash_bytes += b
+                total.bytes_by_op[op] = total.bytes_by_op.get(op, 0.0) + b
+
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry, True)
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    return HloCost(hlo_text).entry_cost()

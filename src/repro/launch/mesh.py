@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state — required by the dry-run isolation
+rule: only ``launch/dryrun.py`` forces the 512-device host platform; smoke
+tests and benchmarks see the 1 real CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The target TPU v5e deployment mesh.
+
+    single-pod: (data=16, model=16)        — 256 chips
+    multi-pod:  (pod=2, data=16, model=16) — 512 chips, ``pod`` crosses DCN
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests use small host-device meshes, e.g. (2,2,2))."""
+    return jax.make_mesh(shape, axes)
+
+
+# --- hardware constants (TPU v5e, per chip) — §Roofline -----------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~per-chip usable)

@@ -1,0 +1,305 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (deliverable g):
+
+    compute    = HLO_FLOPs_per_chip   / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_chip   / HBM_BW
+    collective = coll_bytes_per_chip  / ICI_BW
+
+``compiled.cost_analysis()`` reports flops/bytes of the *post-SPMD,
+per-partition* module (verified by tests/test_dryrun.py scaling check), so
+its numbers are already per-chip.  Collective bytes are not in
+cost_analysis — we parse the compiled HLO text and sum the operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (shapes in the partitioned module are
+local, i.e. per-chip).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(%?[\w.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(rhs: str) -> int:
+    """Bytes of the instruction's result type (head of the RHS, tuples
+    summed).  Only the text before the op name is inspected."""
+    # result type ends at the first opcode token following the type(s)
+    head = rhs.split("(", 1)[0] if not rhs.startswith("(") else rhs
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of collective ops in (post-SPMD) HLO text.
+
+    Two passes: (1) symbol table of instruction-result sizes; (2) for each
+    collective instruction, look up its operands' sizes (falling back to
+    inline operand types, then to the result size).  ``-done`` halves of
+    async pairs are skipped (the ``-start`` carries the operands).
+    """
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        sizes[name] = _result_bytes(m.group(2))
+
+    stats = CollectiveStats()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.search(
+            r"\b(" + "|".join(_COLLECTIVES) + r")(-start)?\(", rhs
+        )
+        if opm is None:
+            continue
+        if re.search(r"\b(" + "|".join(_COLLECTIVES) + r")-done\(", rhs):
+            continue
+        op = opm.group(1)
+        # operand list: text inside the op's parens
+        args_txt = rhs[opm.end():]
+        depth = 1
+        out = []
+        for ch in args_txt:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        args_txt = "".join(out)
+        total = 0
+        # inline-typed operands first
+        for sm in _SHAPE_RE.finditer(args_txt):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        if total == 0:
+            # %ref operands -> symbol table
+            for ref in re.findall(r"%?([\w.\-]+)", args_txt):
+                if ref in sizes:
+                    total += sizes[ref]
+        if total == 0:
+            total = _result_bytes(rhs)
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + total
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+def analytic_flash_traffic(
+    cfg, shape, mesh_shape: Dict[str, int], kind: str, *, block_q: int = 1024
+) -> float:
+    """Per-chip HBM bytes of a Pallas-kernelized attention (P stays in
+    VMEM): q read + out write once, K/V streamed once per q tile.
+
+    The portable chunked-flash measured from the CPU HLO materializes the
+    (Sq x chunk) probability tensors in HBM; on the TPU target the
+    shipped kernel (kernels/flash_attention.py) eliminates exactly the
+    bytes tagged ``flash_bytes`` by hlo_cost, and this function supplies
+    the kernel's own traffic to substitute in.
+    """
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_shape.get(a, 1)
+    m = mesh_shape.get("model", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    dt = 2  # bf16
+
+    def call_bytes(sq: int, sk: int, hq: int, hkv: int, hd: int, hd_v: int) -> float:
+        hq_loc = max(hq // m, 1)
+        q_out = 2.0 * b_loc * sq * hq_loc * max(hd, hd_v) * dt
+        n_tiles = max(-(-sq // block_q), 1)
+        kv = n_tiles * b_loc * sk * hkv * (hd + hd_v) * dt
+        return q_out + kv
+
+    def ssd_bytes(sq_: int) -> float:
+        """Fused-SSD kernel HBM traffic per layer: the projected (z|x|B|C|dt)
+        stream in, y out, inter-chunk states spilled once per chunk; the
+        (B,q,q,H) quadratic buffers stay in VMEM (Mamba2 kernel design)."""
+        if not cfg.ssm_state:
+            return 0.0
+        di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+        ph = cfg.ssm_head_dim
+        width = 2 * di + 2 * g * n + h           # zxbcdt stream
+        nc = max(sq_ // max(cfg.ssm_chunk, 1), 1)
+        io = b_loc * sq_ * (width + di) * dt
+        states = nc * b_loc * h * n * ph * 4     # fp32 inter-chunk states
+        return io + states
+
+    fam = cfg.family
+    mult = 3.0 if kind == "train" else 1.0  # fwd + remat-recompute + bwd
+    s = shape.seq_len
+    if kind == "decode":
+        # one query token against the cache; cache read once per layer
+        mult, sq = 1.0, 1
+    else:
+        sq = s
+
+    if fam in ("dense", "moe", "vlm"):
+        per = call_bytes(sq, s, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.head_dim)
+        return mult * cfg.n_layers * per
+    if fam == "mla_moe":
+        r = cfg.mla_kv_lora_rank + cfg.mla_rope_head_dim
+        per = call_bytes(sq, s, cfg.n_heads, 1, r, r)
+        return mult * cfg.n_layers * per
+    if fam == "encdec":
+        dec_self = call_bytes(sq, s, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.head_dim)
+        cross = call_bytes(sq, cfg.encoder_seq, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.head_dim)
+        enc = (
+            call_bytes(cfg.encoder_seq, cfg.encoder_seq, cfg.n_heads,
+                       cfg.n_kv_heads, cfg.head_dim, cfg.head_dim)
+            if kind != "decode" else 0.0
+        )
+        return mult * (cfg.n_layers * (dec_self + cross) + cfg.encoder_layers * enc)
+    if fam == "hybrid":
+        n_apps = max(cfg.n_layers // max(cfg.hybrid_attn_every, 1), 1)
+        attn = n_apps * call_bytes(sq, s, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.head_dim)
+        return mult * (attn + cfg.n_layers * ssd_bytes(sq))
+    if fam == "ssm":
+        return mult * cfg.n_layers * ssd_bytes(sq)
+    return 0.0
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    n_chips: int
+    model_flops: float                  # 6ND train / 2ND inference (global)
+    flash_bytes_per_chip: float = 0.0   # portable-flash HBM subset
+    kernel_flash_bytes: float = 0.0     # analytic Pallas traffic substitute
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_portable_s(self) -> float:
+        """HBM term of the portable-JAX lowering (flash P-matrices in HBM)."""
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def hbm_bytes_kernelized(self) -> float:
+        """HBM bytes with flash internals replaced by the Pallas kernel's
+        analytic traffic (the deployed TPU configuration).  Capped at the
+        portable number: a kernel never adds traffic, so when scope
+        tagging under-collects (metadata stripped in backward passes) the
+        substitution must not exceed what it replaced."""
+        return min(
+            self.hbm_bytes_per_chip
+            - self.flash_bytes_per_chip
+            + self.kernel_flash_bytes,
+            self.hbm_bytes_per_chip,
+        )
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_kernelized / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time estimate = max of the three terms (perfect
+        overlap assumption; the dominant term is the floor)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops — remat/redundancy waste metric."""
+        total = self.flops_per_chip * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.n_chips * PEAK_FLOPS_BF16 * self.step_s
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "flash_bytes_per_chip": self.flash_bytes_per_chip,
+            "kernel_flash_bytes": self.kernel_flash_bytes,
+            "hbm_bytes_kernelized": self.hbm_bytes_kernelized,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_portable_s": self.memory_portable_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(kind: str, n_params: int, n_active: int, tokens: int) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference; MoE uses active N."""
+    n = n_active
+    return (6.0 if kind == "train" else 2.0) * n * tokens

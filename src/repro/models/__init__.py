@@ -1,0 +1,1 @@
+"""Model zoo: assigned architectures as composable JAX modules."""

@@ -1,0 +1,380 @@
+"""Attention variants: GQA (chunked-flash), MLA (deepseek latent), and the
+KV-cache decode paths.
+
+The training/prefill path uses an online-softmax attention written as a
+``lax.scan`` over KV chunks — the flash algorithm in portable JAX, so the
+(S x S) score matrix never materializes regardless of backend.  On TPU the
+Pallas kernel (``repro.kernels.flash_attention``) implements the same
+computation with explicit VMEM tiling; dispatch picks it when the backend
+is TPU and shapes tile cleanly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.parallel import sp_attention as SP
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# core chunked attention (portable flash)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    chunk: int,
+    q_offset: Array | int = 0,
+    kv_valid_len: Array | None = None,
+    rt=None,
+) -> Array:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D).  ``q_offset`` is the absolute
+    position of q[..., 0, :] (for causal masking during cached decode).
+    ``kv_valid_len`` masks trailing (unwritten) cache positions.
+
+    Under a mesh (``rt``), the query/accumulator tensors are pinned to
+    *sequence* sharding over the TP axis through the whole KV scan — K/V
+    stay replicated and every shard owns a q-row slice, so the scan body
+    needs zero collectives.  Without the pin, SPMD is free to pick a
+    head sharding, which for head counts not divisible by the axis (e.g.
+    llava's 56 heads on 16) degenerates to a per-chunk all-reduce of the
+    score tensor (measured 55 TB/chip on llava prefill_32k — see
+    EXPERIMENTS.md §Perf iteration B1).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    def pin_seq(x, seq_axis_idx: int):
+        """Constrain dim ``seq_axis_idx`` to the TP axis (when divisible)."""
+        if rt is None or not getattr(rt, "active", False) or not rt.tp_axis:
+            return x
+        if not getattr(rt, "pin_attn_seq", True):
+            return x
+        m = rt.mesh.shape[rt.tp_axis]
+        if x.shape[seq_axis_idx] % m != 0 or x.shape[seq_axis_idx] // m < 1:
+            return x
+        spec = [None] * x.ndim
+        spec[0] = rt.dp_axes or None
+        spec[seq_axis_idx] = rt.tp_axis
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(rt.mesh, jax.sharding.PartitionSpec(*spec))
+        )
+
+    chunk = min(chunk, sk)
+    if sk % chunk:  # pad KV to a chunk multiple, mask the tail
+        pad = (-sk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = sk
+        sk += pad
+    n_chunks = sk // chunk
+
+    qf = q.astype(jnp.float32) * scale
+    # fold q heads into kv-head groups: (B, Hkv, group, Sq, D)
+    qf = qf.reshape(b, hkv, group, sq, d)
+    qf = pin_seq(qf, 3)
+
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(sq))  # (Sq,)
+
+    def body(carry, xs):
+        # the named scope tags every op (incl. jvp/transpose derivatives)
+        # as VMEM-resident in a kernelized lowering — launch/hlo_cost.py
+        # buckets their HBM bytes into flash_bytes for the roofline's
+        # Pallas substitution (see launch/roofline.py).
+        with jax.named_scope("flash_inner"):
+            m, l, acc, idx = carry
+            kb, vb = xs  # (B, Hkv, chunk, D)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qf, kb.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            k_pos = idx * chunk + jnp.arange(chunk)
+            neg = jnp.float32(-1e30)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, neg)
+            if kv_valid_len is not None:
+                s = jnp.where((k_pos < kv_valid_len)[None, None, None, None], s, neg)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new, idx + 1), None
+
+    init = (
+        pin_seq(jnp.full((b, hkv, group, sq, 1), -1e30, jnp.float32), 3),
+        pin_seq(jnp.zeros((b, hkv, group, sq, 1), jnp.float32), 3),
+        pin_seq(jnp.zeros((b, hkv, group, sq, d), jnp.float32), 3),
+        jnp.int32(0),
+    )
+    (m, l, acc, _), _ = jax.lax.scan(body, init, (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_dispatch(q, k, v, *, causal, chunk, rt=None) -> Array:
+    """Prefill/train attention: Pallas flash on TPU, chunked scan elsewhere."""
+    s = q.shape[2]
+    if (
+        jax.default_backend() == "tpu"
+        and s % 128 == 0
+        and q.shape[-1] in (64, 128, 256)
+    ):
+        return kops.flash_attention(q, k, v, causal=causal)
+    return chunked_attention(q, k, v, causal=causal, chunk=chunk, rt=rt)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, hq * hd, dtype),
+        "wk": L.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": L.dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def gqa_project_qkv(p, x: Array, cfg: ModelConfig, positions: Array, *, rope: bool = True):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if rope:
+        q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain(x, rt, *axes):
+    """with_sharding_constraint against rt.mesh (no-op when rt is None)."""
+    if rt is None or rt.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rt.mesh, jax.sharding.PartitionSpec(*axes))
+    )
+
+
+def gqa_attn(
+    p, x: Array, cfg: ModelConfig, *, causal: bool = True,
+    positions: Array | None = None, rope: bool = True, rt=None,
+) -> Array:
+    """Full-sequence (train/prefill) GQA attention.
+
+    Under a mesh, q is sequence-sharded over the TP axis (sequence
+    parallelism for the O(S^2) score work) while K/V stay replicated over
+    it — the K/V all-gather-SP scheme (DESIGN.md §6).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = gqa_project_qkv(p, x, cfg, positions, rope=rope)
+    if rt is not None and rt.active:
+        dp = rt.dp_axes or None
+        q = _constrain(q, rt, dp, None, rt.tp_axis, None)
+        k = _constrain(k, rt, dp, None, None, None)
+        v = _constrain(v, rt, dp, None, None, None)
+    out = attention_dispatch(q, k, v, causal=causal, chunk=cfg.attn_chunk, rt=rt)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"]
+
+
+def gqa_decode(
+    p, x: Array, cfg: ModelConfig, k_cache: Array, v_cache: Array, t: Array,
+    *, rope: bool = True, rt=None,
+) -> Tuple[Array, Array, Array]:
+    """Single-token decode: update cache at position t, attend over cache.
+
+    x: (B, 1, D); caches: (B, Hkv, S_max, hd); t: scalar int32.  With a
+    sequence-sharded cache (rt.seq_axis) the attention runs as the
+    flash-combine collective (repro.parallel.sp_attention).
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(t, (b, 1))
+    q, k_new, v_new = gqa_project_qkv(p, x, cfg, positions, rope=rope)
+    if rt is not None and rt.active and rt.seq_axis:
+        out, k_cache, v_cache = SP.sp_decode_attention(
+            q, k_cache, v_cache, k_new, v_new, t, rt.mesh,
+            seq_axis=rt.seq_axis, batch_spec=rt.decode_batch_spec,
+        )
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, t, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, t, axis=2)
+        out = chunked_attention(
+            q, k_cache, v_cache, causal=False, chunk=cfg.attn_chunk,
+            q_offset=t, kv_valid_len=t + 1, rt=rt,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    r = cfg.mla_kv_lora_rank
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        # queries: full-rank (v2-lite has no q compression)
+        "wq": L.dense_init(ks[0], d, h * (dn + dr), dtype),
+        # kv down-projection to the latent + the shared rope key
+        "wkv_a": L.dense_init(ks[1], d, r + dr, dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        # latent up-projection to per-head nope-key and value
+        "wkv_b": L.dense_init(ks[2], r, h * (dn + dv), dtype),
+        "wo": L.dense_init(ks[3], h * dv, d, dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    r = cfg.mla_kv_lora_rank
+
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]                      # (B, S, r + dr)
+    c_kv = L.rms_norm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., r:][:, None]            # (B, 1, S, dr) shared across heads
+    k_rope = L.apply_rope(k_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope.transpose(0, 2, 1, 3), q_rope, c_kv, k_rope
+
+
+def _mla_qcomb(p, q_nope, q_rope, cfg: ModelConfig):
+    """Absorbed query in latent space, pre-scaled: (B,H,Sq,r+dr)."""
+    b, h, sq, dn = q_nope.shape
+    r = cfg.mla_kv_lora_rank
+    wkv_b = p["wkv_b"].reshape(r, h, dn + cfg.mla_v_head_dim)
+    wk = wkv_b[..., :dn]
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope.astype(jnp.float32), wk.astype(jnp.float32))
+    q_comb = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], axis=-1)
+    scale = 1.0 / ((dn + cfg.mla_rope_head_dim) ** 0.5)
+    comp = (q_comb.shape[-1] ** 0.5) * scale  # net scale inside flash = scale
+    return q_comb * comp
+
+
+def _mla_out(p, out_lat, cfg: ModelConfig):
+    """Project the attended latent (B,H,Sq,r) to the model dim."""
+    b, h, sq, r = out_lat.shape
+    dn, dv = cfg.mla_nope_head_dim, cfg.mla_v_head_dim
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    wv = wkv_b[..., dn:]
+    out = jnp.einsum("bhqr,rhd->bhqd", out_lat.astype(jnp.float32), wv.astype(jnp.float32))
+    out = out.transpose(0, 2, 1, 3).reshape(b, sq, h * dv)
+    return (out @ p["wo"].astype(jnp.float32)).astype(p["wo"].dtype)
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg: ModelConfig, *, causal, q_offset=0, kv_valid_len=None, rt=None):
+    """Attention over the latent cache.
+
+    q_nope: (B,H,Sq,dn), q_rope: (B,H,Sq,dr), c_kv: (B,Sk,r),
+    k_rope: (B,1,Sk,dr).  The nope-key and value are materialized per
+    chunk from the latent via wkv_b — the compressed-cache formulation.
+    """
+    b, h, sq, dn = q_nope.shape
+    r = cfg.mla_kv_lora_rank
+
+    # scores = q_lat . c_kv + q_rope . k_rope  — run chunked-flash over Sk
+    # by treating the latent (+rope) as a combined "key" of dim r+dr.
+    q_comb = _mla_qcomb(p, q_nope, q_rope, cfg)   # pre-scaled (B,H,Sq,r+dr)
+    if rt is not None and rt.active:
+        dp = rt.dp_axes or None
+        q_comb = _constrain(q_comb, rt, dp, None, rt.tp_axis, None)
+    keys = jnp.concatenate(
+        [c_kv, k_rope[:, 0]], axis=-1
+    )[:, None]                                  # (B, 1, Sk, r+dr)
+    out_lat = chunked_attention(
+        q_comb.astype(jnp.float32),
+        keys.astype(jnp.float32),
+        jnp.concatenate([c_kv, jnp.zeros_like(k_rope[:, 0])], axis=-1)[:, None].astype(jnp.float32),
+        causal=causal, chunk=cfg.attn_chunk, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, rt=rt,
+    )                                            # (B,H,Sq,r+dr) — value=latent
+    out_lat = out_lat[..., :r]                   # attended latent
+    return _mla_out(p, out_lat, cfg)
+
+
+def mla_attn(p, x: Array, cfg: ModelConfig, *, causal: bool = True, rt=None) -> Array:
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    return _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, causal=causal, rt=rt)
+
+
+def mla_decode(
+    p, x: Array, cfg: ModelConfig, ckv_cache: Array, krope_cache: Array, t: Array,
+    rt=None,
+) -> Tuple[Array, Array, Array]:
+    """Decode with the compressed latent cache.
+
+    ckv_cache: (B, S_max, r); krope_cache: (B, 1, S_max, dr).  With a
+    sequence-sharded cache, attention runs as the MLA flash combine.
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(t, (b, 1))
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, x, cfg, positions)
+    if rt is not None and rt.active and rt.seq_axis:
+        q_comb = _mla_qcomb(p, q_nope, q_rope, cfg)
+        out_lat, ckv_cache, krope_cache = SP.sp_decode_attention_mla(
+            q_comb, ckv_cache, krope_cache, c_new, kr_new, t, rt.mesh,
+            seq_axis=rt.seq_axis, batch_spec=rt.decode_batch_spec,
+        )
+        return _mla_out(p, out_lat, cfg), ckv_cache, krope_cache
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, c_new, t, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(krope_cache, kr_new, t, axis=2)
+    out = _mla_attend(
+        p, q_nope, q_rope, ckv_cache, krope_cache, cfg,
+        causal=False, q_offset=t, kv_valid_len=t + 1,
+    )
+    return out, ckv_cache, krope_cache

@@ -1,0 +1,119 @@
+"""Shared model building blocks: norms, RoPE, projections, embeddings,
+losses.  Parameters are plain nested dicts (pytrees); init functions are
+pure (eval_shape-compatible, required by the allocation-free dry-run)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies (float32)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, D_head) with rotary over the last dim; positions (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, d) float32."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    logits_fn, hidden: Array, labels: Array, mask: Array, chunk: int
+) -> Array:
+    """Cross-entropy with the vocab projection applied per sequence chunk.
+
+    ``hidden``: (B, S, D); ``logits_fn(h_chunk) -> (B, c, V)``.  Chunking
+    bounds the (tokens x vocab) logit buffer — at 152k vocab the full
+    buffer dominates activation memory otherwise (DESIGN.md §6).
+    """
+    b, s, d = hidden.shape
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    hid = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lab = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    msk = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        h, y, m = xs
+        logits = logits_fn(h).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hid, lab, msk))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,113 @@
+"""Mamba2 language model (pure-SSM family)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    dtype = L.dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(
+        lambda k: {"ln": jnp.ones((cfg.d_model,), dtype),
+                   "mamba": S.mamba2_init(k, cfg, dtype)}
+    )(layer_keys)
+    params: Params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def mamba_hidden(params: Params, tokens: Array, cfg: ModelConfig,
+                 rt: Optional[T.ParallelRuntime] = None) -> Array:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+
+    def body(xx, lp):
+        h = L.rms_norm(xx, lp["ln"], cfg.norm_eps)
+        return xx + S.ssd_forward(lp["mamba"], h, cfg), None
+
+    x, _ = jax.lax.scan(T._remat(body, cfg), x, params["layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def mamba_loss(params, batch, cfg, rt=None) -> Array:
+    hidden = mamba_hidden(params, batch["tokens"], cfg, rt)
+    return L.chunked_softmax_xent(
+        lambda h: T.logits_fn(params, cfg, h),
+        hidden, batch["labels"], batch["mask"].astype(jnp.float32),
+        min(cfg.logit_chunk, hidden.shape[1]),
+    )
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Array]:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), cdt),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_decode_step(params, cache, tokens: Array, cfg: ModelConfig, rt=None):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+
+    def body(xx, xs):
+        lp, conv_st, ssm_st = xs
+        h = L.rms_norm(xx, lp["ln"], cfg.norm_eps)
+        out, conv_st, ssm_st = S.ssd_decode(lp["mamba"], h, cfg, conv_st, ssm_st)
+        return xx + out, (conv_st, ssm_st)
+
+    x, (conv, ssm) = jax.lax.scan(body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    new_cache = {"conv": conv, "ssm": ssm, "t": cache["t"] + 1}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)
+    return logits.astype(jnp.float32), new_cache
+
+
+def mamba_prefill(params, tokens: Array, cfg: ModelConfig, rt=None,
+                  *, max_seq: Optional[int] = None):
+    """Sequence-parallel prefill: one chunked-SSD forward per layer with
+    ``return_state=True`` — the prompt is processed in O(S/chunk) scan
+    steps of dense MXU work (not one decode step per token), and the
+    decode-ready (conv ring, SSM state) pair falls out of the same pass.
+    """
+    b, s = tokens.shape
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+
+    def body(xx, lp):
+        h = L.rms_norm(xx, lp["ln"], cfg.norm_eps)
+        out, conv_st, ssm_st = S.ssd_forward(
+            lp["mamba"], h, cfg, return_state=True
+        )
+        return xx + out, (conv_st, ssm_st)
+
+    x, (conv, ssm) = jax.lax.scan(body, x, params["layers"])
+    cache = {"conv": conv, "ssm": ssm, "t": jnp.asarray(s, jnp.int32)}
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)
+    return logits.astype(jnp.float32), cache

@@ -1,0 +1,94 @@
+"""Family registry: uniform init/loss/prefill/decode API per architecture."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba_lm as MB
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models import zamba as Z
+
+
+class ModelApi(NamedTuple):
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def _transformer_api() -> ModelApi:
+    return ModelApi(
+        init=T.decoder_init,
+        loss=T.lm_loss,
+        prefill=lambda params, batch, cfg, rt=None, max_seq=None: T.prefill(
+            params, batch["tokens"], cfg, rt, max_seq=max_seq,
+            vision_embeds=batch.get("vision_embeds"),
+        ),
+        decode_step=lambda params, cache, batch, cfg, rt=None: T.decode_step(
+            params, cache, batch["tokens"], cfg, rt
+        ),
+        init_cache=T.init_cache,
+    )
+
+
+def _mamba_api() -> ModelApi:
+    return ModelApi(
+        init=MB.mamba_init,
+        loss=MB.mamba_loss,
+        prefill=lambda params, batch, cfg, rt=None, max_seq=None: MB.mamba_prefill(
+            params, batch["tokens"], cfg, rt, max_seq=max_seq
+        ),
+        decode_step=lambda params, cache, batch, cfg, rt=None: MB.mamba_decode_step(
+            params, cache, batch["tokens"], cfg, rt
+        ),
+        init_cache=MB.mamba_init_cache,
+    )
+
+
+def _zamba_api() -> ModelApi:
+    return ModelApi(
+        init=Z.zamba_init,
+        loss=Z.zamba_loss,
+        prefill=lambda params, batch, cfg, rt=None, max_seq=None: Z.zamba_prefill(
+            params, batch["tokens"], cfg, rt, max_seq=max_seq
+        ),
+        decode_step=lambda params, cache, batch, cfg, rt=None: Z.zamba_decode_step(
+            params, cache, batch["tokens"], cfg, rt
+        ),
+        init_cache=Z.zamba_init_cache,
+    )
+
+
+def _whisper_api() -> ModelApi:
+    return ModelApi(
+        init=W.whisper_init,
+        loss=W.whisper_loss,
+        prefill=lambda params, batch, cfg, rt=None, max_seq=None: W.whisper_prefill(
+            params, batch["tokens"], batch["frames"], cfg, rt, max_seq=max_seq
+        ),
+        decode_step=lambda params, cache, batch, cfg, rt=None: W.whisper_decode_step(
+            params, cache, batch["tokens"], cfg, rt
+        ),
+        init_cache=W.whisper_init_cache,
+    )
+
+
+_FAMILY_APIS: Dict[str, Callable[[], ModelApi]] = {
+    "dense": _transformer_api,
+    "moe": _transformer_api,
+    "mla_moe": _transformer_api,
+    "vlm": _transformer_api,
+    "ssm": _mamba_api,
+    "hybrid": _zamba_api,
+    "encdec": _whisper_api,
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    return _FAMILY_APIS[cfg.family]()

@@ -1,0 +1,252 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Chunked SSD algorithm (Dao & Gu 2024) with the inter-chunk state
+recurrence expressed through the Scan DPP (``jax.lax.associative_scan``
+over affine state updates) — log-depth across chunks, which is the
+TPU-friendly realization of the paper's Scan primitive at the LM layer
+(DESIGN.md §4).  Intra-chunk work is dense (Q x Q) attention-like einsums
+that map onto the MXU.
+
+Decode path is the O(1) recurrent update over the cached (H, P, N) state
+plus a depthwise-conv ring buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 6)
+    return {
+        # projection to (z, x, B, C, dt)
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * g * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + g * n]
+    c = zxbcdt[..., 2 * di + g * n : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: Array, w: Array, bias: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is tiny (4): unrolled taps fuse into one VPU pass
+        out = out + pad[:, i : i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _chunk_intra(cc, bc_, xc, dac, dtc, s_prev):
+    """One chunk's SSD compute given the entering state.
+
+    cc/bc_: (B,q,H,N); xc: (B,q,H,P); dac/dtc: (B,q,H); s_prev: (B,H,N,P).
+    Returns (y_chunk (B,q,H,P), new_state, chunk_decay).
+
+    The whole body is scoped ``ssd_inner``: its (B,q,q,H) quadratic
+    buffers live in VMEM in a fused TPU SSD kernel (the Mamba2 kernel
+    design); launch/hlo_cost.py buckets their HBM bytes accordingly for
+    the roofline's kernelized memory term.
+    """
+    return _chunk_intra_scoped(cc, bc_, xc, dac, dtc, s_prev)
+
+
+def _chunk_intra_scoped(cc, bc_, xc, dac, dtc, s_prev):
+    with jax.named_scope("ssd_inner"):
+        return _chunk_intra_body(cc, bc_, xc, dac, dtc, s_prev)
+
+
+def _chunk_intra_body(cc, bc_, xc, dac, dtc, s_prev):
+    q = cc.shape[1]
+    cum = jnp.cumsum(dac, axis=1)                        # (B,q,H)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]        # (B,q,q,H)
+    lmask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: exp on the (upper-triangle) masked lanes overflows
+    # and poisons gradients through the where.
+    ldecay = jnp.exp(jnp.where(lmask[None, :, :, None], seg, -1e30))
+
+    scores = jnp.einsum(
+        "bihd,bjhd->bijh", cc, bc_, preferred_element_type=jnp.float32
+    ) * ldecay
+    y_diag = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtc, xc)
+
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # (B,q,H)
+    states = jnp.einsum(
+        "bjh,bjh,bjhd,bjhp->bhdp", decay_to_end, dtc, bc_, xc
+    )                                                     # (B,H,N,P)
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=1))           # (B,H)
+
+    decay_from_start = jnp.exp(cum)                       # (B,q,H)
+    y_off = jnp.einsum("bihd,bih,bhdp->bihp", cc, decay_from_start, s_prev)
+
+    new_state = s_prev * chunk_decay[..., None, None] + states
+    return y_diag + y_off, new_state, chunk_decay
+
+
+def ssd_forward(
+    p, x_in: Array, cfg: ModelConfig, *, inter_chunk: str = "scan",
+    return_state: bool = False,
+):
+    """Full-sequence SSD.  x_in: (B, S, d_model) -> (B, S, d_model).
+
+    ``inter_chunk``:
+      * ``scan``  — sequential lax.scan over chunks carrying the state;
+        memory-bounded (one (B,q,q,H) buffer live at a time).  Default.
+      * ``assoc`` — the Scan-DPP form: per-chunk states computed in
+        parallel, combined with a log-depth ``associative_scan``.  Higher
+        peak memory (all chunks live); used for short sequences and as the
+        paper-technique showcase (DESIGN.md §4).
+
+    ``return_state=True`` additionally returns the decode-ready states
+    (conv ring buffer (B, K-1, conv_dim), SSM state (B, H, N, P)) so
+    prefill runs sequence-parallel instead of token-by-token.
+    """
+    bsz, s, _ = x_in.shape
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = x_in @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([x, b, c], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x, b, c = xbc[..., :di], xbc[..., di : di + g * n], xbc[..., di + g * n :]
+
+    # heads (compute in fp32 through the recurrence for stability)
+    x = x.reshape(bsz, s, h, ph).astype(jnp.float32)
+    b = b.reshape(bsz, s, g, n).astype(jnp.float32)
+    c = c.reshape(bsz, s, g, n).astype(jnp.float32)
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=2)                     # (B,S,H,N)
+    c = jnp.repeat(c, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                            # (H,)
+    da = dt * a                                         # (B,S,H) log-decay
+
+    def chunk(t):  # (B,S,...) -> (nc,B,q,...)
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, bc_, cc, dac, dtc = map(chunk, (x, b, c, da, dt))
+
+    final_state = None
+    if inter_chunk == "scan":
+        def body(state, xs):
+            cci, bci, xci, daci, dtci = xs
+            y, new_state, _ = _chunk_intra(cci, bci, xci, daci, dtci, state)
+            return new_state, y
+
+        s0 = jnp.zeros((bsz, h, n, ph), jnp.float32)
+        final_state, ys = jax.lax.scan(body, s0, (cc, bc_, xc, dac, dtc))
+        y = ys.swapaxes(0, 1).reshape(bsz, s, h, ph)
+    else:
+        # parallel intra-chunk pass (vmapped over chunks) ...
+        zero = jnp.zeros((nc, bsz, h, n, ph), jnp.float32)
+        y_diag, states, chunk_decay = jax.vmap(
+            lambda cci, bci, xci, daci, dtci, sp: _chunk_intra(cci, bci, xci, daci, dtci, sp)
+        )(cc, bc_, xc, dac, dtc, zero)
+        # ... then the inter-chunk affine recurrence via the Scan DPP:
+        #   S_k = decay_k * S_{k-1} + states_k
+        def combine(e1, e2):
+            a1, s1 = e1
+            a2, s2 = e2
+            return a1 * a2, s1 * a2[..., None, None] + s2
+
+        _, s_inc = jax.lax.associative_scan(combine, (chunk_decay, states), axis=0)
+        s_prev = jnp.concatenate([jnp.zeros_like(s_inc[:1]), s_inc[:-1]], axis=0)
+        # add the inter-chunk contribution (y_diag already includes s_prev=0)
+        cum = jnp.cumsum(dac, axis=2)                    # (nc,B,q,H)
+        y_off = jnp.einsum("nbihd,nbih,nbhdp->nbihp", cc, jnp.exp(cum), s_prev)
+        y = (y_diag + y_off).swapaxes(0, 1).reshape(bsz, s, h, ph)
+        final_state = s_inc[-1]
+
+    y = y + x * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+
+    # gated RMSNorm + out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(y.astype(x_in.dtype), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    # decode-ready states: conv ring buffer = last K-1 raw (pre-conv) taps
+    kk = cfg.ssm_conv
+    pad = jnp.zeros((bsz, max(kk - 1 - s, 0), xbc_raw.shape[-1]), xbc_raw.dtype)
+    conv_state = jnp.concatenate([pad, xbc_raw[:, max(s - (kk - 1), 0):]], axis=1)
+    return out, conv_state, final_state
+
+
+def ssd_decode(
+    p, x_in: Array, cfg: ModelConfig, conv_state: Array, ssm_state: Array
+) -> Tuple[Array, Array, Array]:
+    """Single-token recurrent step.
+
+    x_in: (B, 1, d_model); conv_state: (B, K-1, conv_dim);
+    ssm_state: (B, H, N, P).
+    """
+    bsz = x_in.shape[0]
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    kk = cfg.ssm_conv
+
+    zxbcdt = x_in @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)[:, 0]      # (B, conv_dim)
+
+    # conv ring buffer
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,K,conv)
+    conv_state = window[:, 1:]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+
+    x = conv_out[:, :di].reshape(bsz, h, ph)
+    b = conv_out[:, di : di + g * n].reshape(bsz, g, n)
+    c = conv_out[:, di + g * n :].reshape(bsz, g, n)
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=1)                       # (B,H,N)
+    c = jnp.repeat(c, rep, axis=1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                               # (B,H)
+
+    # state update: S = decay S + dt * B x^T
+    upd = jnp.einsum("bh,bhd,bhp->bhdp", dt, b, x.astype(jnp.float32))
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhd,bhdp->bhp", c, ssm_state)        # (B,H,P)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(y.astype(x_in.dtype), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssm_state

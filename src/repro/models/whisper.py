@@ -1,0 +1,227 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, only the transformer backbone is modeled: the conv
+frontend is a stub — ``input_specs`` supplies precomputed frame embeddings
+(B, S_enc, D), which pass through a linear frontend projection standing in
+for the conv stack's output layer.  Encoder uses sinusoidal positions and
+bidirectional attention; decoder uses learned positions, causal self
+attention, and cross attention over the encoder memory.  LayerNorm (with
+bias) throughout, matching the Whisper family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _ln_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["g"], p["b"], eps)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _ln_init(cfg.d_model, dtype),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "ln2": _ln_init(cfg.d_model, dtype),
+        "mlp": T.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_init(cfg.d_model, dtype),
+        "self_attn": A.gqa_init(k1, cfg, dtype),
+        "ln2": _ln_init(cfg.d_model, dtype),
+        "cross_attn": A.gqa_init(k2, cfg, dtype),
+        "ln3": _ln_init(cfg.d_model, dtype),
+        "mlp": T.mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def whisper_init(key, cfg: ModelConfig) -> Params:
+    dtype = L.dtype_of(cfg.param_dtype)
+    k_fe, k_enc, k_dec, k_emb, k_pos = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "frontend_proj": L.dense_init(k_fe, cfg.d_model, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": _ln_init(cfg.d_model, dtype),
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": (jax.random.normal(k_pos, (cfg.max_seq, cfg.d_model)) * 0.01).astype(dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": _ln_init(cfg.d_model, dtype),
+        # whisper ties the decoder embedding with the output projection
+    }
+
+
+def encode(params: Params, frames: Array, cfg: ModelConfig,
+           rt: Optional[T.ParallelRuntime] = None) -> Array:
+    """frames: (B, S_enc, D) precomputed embeddings (conv stub)."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b, s, _ = frames.shape
+    x = (frames.astype(cdt) @ params["frontend_proj"])
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(cdt)[None]
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+
+    def body(xx, lp):
+        h = _ln(xx, lp["ln1"], cfg.norm_eps)
+        xx = xx + A.gqa_attn(lp["attn"], h, cfg, causal=False, rope=False)
+        h = _ln(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(lp["mlp"], h)
+        return xx, None
+
+    x, _ = jax.lax.scan(T._remat(body, cfg), x, params["enc_layers"])
+    return _ln(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(lp, x, memory, cfg):
+    """Cross attention: q from decoder x, k/v from encoder memory."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    p = lp["cross_attn"]
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = (memory @ p["wk"]).reshape(b, sm, hkv, hd).transpose(0, 2, 1, 3)
+    v = (memory @ p["wv"]).reshape(b, sm, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qkv_bias:
+        pass  # whisper has no qkv bias in this config
+    out = A.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return out @ p["wo"]
+
+
+def decode_hidden(params: Params, tokens: Array, memory: Array, cfg: ModelConfig,
+                  rt=None) -> Array:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cdt)
+    x = x + params["pos_embed"][:s].astype(cdt)[None]
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+
+    def body(xx, lp):
+        h = _ln(xx, lp["ln1"], cfg.norm_eps)
+        xx = xx + A.gqa_attn(lp["self_attn"], h, cfg, causal=True, rope=False)
+        h = _ln(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + _cross_attend(lp, h, memory, cfg)
+        h = _ln(xx, lp["ln3"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(lp["mlp"], h)
+        return xx, None
+
+    x, _ = jax.lax.scan(T._remat(body, cfg), x, params["dec_layers"])
+    return _ln(x, params["dec_norm"], cfg.norm_eps)
+
+
+def whisper_loss(params, batch, cfg, rt=None) -> Array:
+    memory = encode(params, batch["frames"], cfg, rt)
+    hidden = decode_hidden(params, batch["tokens"], memory, cfg, rt)
+    return L.chunked_softmax_xent(
+        lambda h: h @ params["embed"].T.astype(h.dtype),
+        hidden, batch["labels"], batch["mask"].astype(jnp.float32),
+        min(cfg.logit_chunk, hidden.shape[1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def whisper_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Array]:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), cdt),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), cdt),
+        # cross-attention K/V precomputed from the encoder memory
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim), cdt),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim), cdt),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def whisper_prefill(params, tokens: Array, frames: Array, cfg: ModelConfig,
+                    rt=None, *, max_seq: Optional[int] = None):
+    """Encode + decoder prefill; fills self- and cross-attn caches."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    cdt = L.dtype_of(cfg.compute_dtype)
+    memory = encode(params, frames, cfg, rt)
+    cache = whisper_init_cache(cfg, b, max_seq)
+    sm = memory.shape[1]
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    x = params["embed"][tokens].astype(cdt)
+    x = x + params["pos_embed"][:s].astype(cdt)[None]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, xs):
+        lp, kc, vc = xs
+        h = _ln(xx, lp["ln1"], cfg.norm_eps)
+        q, k, v = A.gqa_project_qkv(lp["self_attn"], h, cfg, positions, rope=False)
+        kc = kc.at[:, :, :s].set(k)
+        vc = vc.at[:, :, :s].set(v)
+        out = A.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+        xx = xx + out @ lp["self_attn"]["wo"]
+        h = _ln(xx, lp["ln2"], cfg.norm_eps)
+        xx = xx + _cross_attend(lp, h, memory, cfg)
+        h = _ln(xx, lp["ln3"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(lp["mlp"], h)
+        xk = (memory @ lp["cross_attn"]["wk"]).reshape(b, sm, hkv, hd).transpose(0, 2, 1, 3)
+        xv = (memory @ lp["cross_attn"]["wv"]).reshape(b, sm, hkv, hd).transpose(0, 2, 1, 3)
+        return xx, (kc, vc, xk, xv)
+
+    x, (k, v, xk, xv) = jax.lax.scan(body, x, (params["dec_layers"], cache["k"], cache["v"]))
+    cache.update(k=k, v=v, xk=xk, xv=xv, t=jnp.asarray(s, jnp.int32))
+    x = _ln(x[:, -1:], params["dec_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits.astype(jnp.float32), cache
+
+
+def whisper_decode_step(params, cache, tokens: Array, cfg: ModelConfig, rt=None):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b = tokens.shape[0]
+    t = cache["t"]
+    x = params["embed"][tokens].astype(cdt)
+    x = x + jnp.take(params["pos_embed"], t[None], axis=0).astype(cdt)[None]
+    hd, hq = cfg.head_dim, cfg.n_heads
+
+    def body(xx, xs):
+        lp, kc, vc, xk, xv = xs
+        h = _ln(xx, lp["ln1"], cfg.norm_eps)
+        att, kc, vc = A.gqa_decode(lp["self_attn"], h, cfg, kc, vc, t, rope=False)
+        xx = xx + att
+        h = _ln(xx, lp["ln2"], cfg.norm_eps)
+        p = lp["cross_attn"]
+        q = (h @ p["wq"]).reshape(b, 1, hq, hd).transpose(0, 2, 1, 3)
+        out = A.chunked_attention(q, xk, xv, causal=False, chunk=cfg.attn_chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+        xx = xx + out @ p["wo"]
+        h = _ln(xx, lp["ln3"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(lp["mlp"], h)
+        return xx, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    new_cache = dict(cache, k=k, v=v, t=t + 1)
+    x = _ln(x, params["dec_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,235 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a weight-shared attention block.
+
+Structure (cfg.hybrid_attn_every = k): the L mamba layers are grouped into
+L/k "apps"; after each group of k mamba blocks, a single *shared*
+(attention + MLP) transformer block is applied — same weights every time,
+per the Zamba2 design (the shared block amortizes attention parameters
+across the depth).  Each application keeps its own KV cache.
+
+Layer traversal is a nested scan: outer over apps, inner over the k mamba
+blocks of the app — HLO stays O(1) in depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    k = cfg.hybrid_attn_every
+    assert k and cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+def zamba_init(key, cfg: ModelConfig) -> Params:
+    dtype = L.dtype_of(cfg.param_dtype)
+    k_emb, k_mamba, k_shared, k_out = jax.random.split(key, 4)
+
+    layer_keys = jax.random.split(k_mamba, cfg.n_layers)
+    mamba_layers = jax.vmap(
+        lambda k: {"ln": jnp.ones((cfg.d_model,), dtype),
+                   "mamba": S.mamba2_init(k, cfg, dtype)}
+    )(layer_keys)
+
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": A.gqa_init(k_shared, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": T.mlp_init(jax.random.fold_in(k_shared, 1), cfg.d_model, cfg.d_ff, dtype),
+    }
+
+    params: Params = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba_layers": mamba_layers,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def _mamba_block(lp, x, cfg):
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    return x + S.ssd_forward(lp["mamba"], h, cfg)
+
+
+def _shared_block(sp, x, cfg, rt):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    x = x + A.gqa_attn(sp["attn"], h, cfg, causal=True, rt=rt)
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + T.mlp_apply(sp["mlp"], h)
+
+
+def _grouped(tree, n_apps: int, k: int):
+    return jax.tree.map(
+        lambda a: a.reshape(n_apps, k, *a.shape[1:]), tree
+    )
+
+
+def zamba_hidden(
+    params: Params, tokens: Array, cfg: ModelConfig,
+    rt: Optional[T.ParallelRuntime] = None,
+) -> Array:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    k = cfg.hybrid_attn_every
+    n_apps = _n_apps(cfg)
+    x = params["embed"][tokens].astype(cdt)
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+
+    grouped = _grouped(params["mamba_layers"], n_apps, k)
+    shared = params["shared"]
+
+    def inner(xx, lp):
+        return _mamba_block(lp, xx, cfg), None
+
+    inner_r = T._remat(inner, cfg)
+
+    def outer(xx, app_layers):
+        xx, _ = jax.lax.scan(inner_r, xx, app_layers)
+        xx = _shared_block(shared, xx, cfg, rt)
+        return xx, None
+
+    x, _ = jax.lax.scan(outer, x, grouped)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def zamba_loss(params, batch, cfg, rt=None) -> Array:
+    hidden = zamba_hidden(params, batch["tokens"], cfg, rt)
+    return L.chunked_softmax_xent(
+        lambda h: T.logits_fn(params, cfg, h),
+        hidden, batch["labels"], batch["mask"].astype(jnp.float32),
+        min(cfg.logit_chunk, hidden.shape[1]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Array]:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    n_apps = _n_apps(cfg)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), cdt),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+        "k": jnp.zeros((n_apps, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), cdt),
+        "v": jnp.zeros((n_apps, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), cdt),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def zamba_prefill(
+    params: Params, tokens: Array, cfg: ModelConfig,
+    rt: Optional[T.ParallelRuntime] = None, *, max_seq: Optional[int] = None,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Sequence-parallel prefill: chunked-SSD forward with state extraction
+    for the mamba blocks, full-sequence flash attention with KV-cache fill
+    for each shared-block application."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    cdt = L.dtype_of(cfg.compute_dtype)
+    k = cfg.hybrid_attn_every
+    n_apps = _n_apps(cfg)
+    x = params["embed"][tokens].astype(cdt)
+    x = T.shard_act(x, rt, rt.dp_axes if rt else None, None, None)
+    shared = params["shared"]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    grouped = _grouped(params["mamba_layers"], n_apps, k)
+    kc0 = jnp.zeros((b, cfg.n_kv_heads, max_seq, cfg.head_dim), cdt)
+    vc0 = jnp.zeros_like(kc0)
+
+    def inner(xx, lp):
+        h = L.rms_norm(xx, lp["ln"], cfg.norm_eps)
+        out, conv_st, ssm_st = S.ssd_forward(lp["mamba"], h, cfg, return_state=True)
+        return xx + out, (conv_st, ssm_st)
+
+    def outer(xx, app_layers):
+        xx, (conv_st, ssm_st) = jax.lax.scan(inner, xx, app_layers)
+        h = L.rms_norm(xx, shared["ln1"], cfg.norm_eps)
+        q, kv_k, kv_v = A.gqa_project_qkv(shared["attn"], h, cfg, positions)
+        kc = kc0.at[:, :, :s].set(kv_k.astype(cdt))
+        vc = vc0.at[:, :, :s].set(kv_v.astype(cdt))
+        att = A.attention_dispatch(q, kv_k, kv_v, causal=True, chunk=cfg.attn_chunk, rt=rt)
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+        xx = xx + att @ shared["attn"]["wo"]
+        h = L.rms_norm(xx, shared["ln2"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(shared["mlp"], h)
+        return xx, (conv_st, ssm_st, kc, vc)
+
+    x, (conv_g, ssm_g, kc, vc) = jax.lax.scan(outer, x, grouped)
+    cache = {
+        "conv": conv_g.reshape(cfg.n_layers, *conv_g.shape[2:]),
+        "ssm": ssm_g.reshape(cfg.n_layers, *ssm_g.shape[2:]),
+        "k": kc,
+        "v": vc,
+        "t": jnp.asarray(s, jnp.int32),
+    }
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)
+    return logits.astype(jnp.float32), cache
+
+
+def zamba_decode_step(
+    params: Params, cache: Dict[str, Array], tokens: Array, cfg: ModelConfig,
+    rt: Optional[T.ParallelRuntime] = None,
+) -> Tuple[Array, Dict[str, Array]]:
+    cdt = L.dtype_of(cfg.compute_dtype)
+    k = cfg.hybrid_attn_every
+    n_apps = _n_apps(cfg)
+    x = params["embed"][tokens].astype(cdt)
+    t = cache["t"]
+    shared = params["shared"]
+
+    grouped_layers = _grouped(params["mamba_layers"], n_apps, k)
+    grouped_conv = cache["conv"].reshape(n_apps, k, *cache["conv"].shape[1:])
+    grouped_ssm = cache["ssm"].reshape(n_apps, k, *cache["ssm"].shape[1:])
+
+    def inner(xx, xs):
+        lp, conv_st, ssm_st = xs
+        h = L.rms_norm(xx, lp["ln"], cfg.norm_eps)
+        out, conv_st, ssm_st = S.ssd_decode(lp["mamba"], h, cfg, conv_st, ssm_st)
+        return xx + out, (conv_st, ssm_st)
+
+    def outer(xx, xs):
+        app_layers, conv_st, ssm_st, kc, vc = xs
+        xx, (conv_st, ssm_st) = jax.lax.scan(inner, xx, (app_layers, conv_st, ssm_st))
+        h = L.rms_norm(xx, shared["ln1"], cfg.norm_eps)
+        att, kc, vc = A.gqa_decode(shared["attn"], h, cfg, kc, vc, t)
+        xx = xx + att
+        h = L.rms_norm(xx, shared["ln2"], cfg.norm_eps)
+        xx = xx + T.mlp_apply(shared["mlp"], h)
+        return xx, (conv_st, ssm_st, kc, vc)
+
+    x, (conv_g, ssm_g, kc, vc) = jax.lax.scan(
+        outer, x, (grouped_layers, grouped_conv, grouped_ssm, cache["k"], cache["v"])
+    )
+
+    new_cache = {
+        "conv": conv_g.reshape(cfg.n_layers, *conv_g.shape[2:]),
+        "ssm": ssm_g.reshape(cfg.n_layers, *ssm_g.shape[2:]),
+        "k": kc,
+        "v": vc,
+        "t": t + 1,
+    }
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,19 @@
+"""Distribution layer: sharding rules + sequence-parallel attention."""
+
+from repro.parallel.sharding import (
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_shardings,
+    param_specs,
+)
+from repro.parallel.sp_attention import sp_decode_attention
+
+__all__ = [
+    "batch_specs",
+    "cache_specs",
+    "dp_axes",
+    "param_shardings",
+    "param_specs",
+    "sp_decode_attention",
+]

@@ -1,0 +1,186 @@
+"""Parameter / batch / cache sharding rules for the production mesh.
+
+Scheme (DESIGN.md §6):
+
+* ``pod``   — pure data parallelism across pods (gradients cross the DCN
+  once per step; parameters are replicated pod-to-pod).
+* ``data``  — batch sharding + FSDP: every weight matrix shards its
+  *input-feature* (or vocab-row) dimension over ``data``; XLA turns the
+  gradient all-reduce into reduce-scatter + all-gather pairs per layer.
+* ``model`` — tensor parallelism (attention heads / FFN hidden / vocab
+  columns) and expert parallelism (MoE expert dim, consumed by the
+  shard_map dispatch in ``repro.models.moe``).
+
+Rules are name-based (t5x-style): the last path component plus containing
+module names select a spec for the trailing dims; scanned-layer stacks get
+an extra leading ``None`` automatically (specs are padded on the left).
+
+SSM note: Mamba in_proj mixes (z|x|B|C|dt) segments in one output dim, so
+TP-splitting it would shear the segment boundaries; SSM blocks use FSDP
+only (the shared attention/MLP block of zamba2 still gets TP).  Recorded
+in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# (path regex, spec for trailing dims).  First match wins.
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    # --- MoE expert stacks (E, D, F) / (E, F, D): EP over model ------------
+    (r"moe/w_gate$",  ("model", "data", None)),
+    (r"moe/w_up$",    ("model", "data", None)),
+    (r"moe/w_down$",  ("model", None, "data")),
+    (r"moe/router$",  ("data", None)),
+    (r"moe/shared/w_gate$", ("data", "model")),
+    (r"moe/shared/w_up$",   ("data", "model")),
+    (r"moe/shared/w_down$", ("model", "data")),
+    # --- MLA ----------------------------------------------------------------
+    (r"attn/wq$",     ("data", "model")),
+    (r"attn/wkv_a$",  ("data", None)),
+    (r"attn/wkv_b$",  (None, "model")),
+    (r"attn/kv_norm$", (None,)),
+    # --- GQA / generic projections ------------------------------------------
+    (r"(wq|wk|wv|w_gate|w_up)$", ("data", "model")),
+    (r"(wo|w_down)$", ("model", "data")),
+    (r"(bq|bk|bv)$",  ("model",)),
+    # --- SSM (FSDP only; see module docstring) -------------------------------
+    (r"mamba/in_proj$",  ("data", None)),
+    (r"mamba/out_proj$", (None, "data")),
+    (r"mamba/conv_w$",   (None, None)),
+    (r"mamba/conv_b$",   (None,)),
+    (r"mamba/(a_log|dt_bias|d_skip)$", (None,)),
+    (r"mamba/out_norm$", (None,)),
+    # --- embeddings -----------------------------------------------------------
+    (r"embed$",        ("model", "data")),
+    (r"unembed$",      ("data", "model")),
+    (r"pos_embed$",    (None, "data")),
+    (r"frontend_proj$", ("data", None)),
+    # --- norms / everything small ---------------------------------------------
+    (r".*", (None,)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(
+    path_s: str,
+    shape: Sequence[int],
+    mesh_axes: Sequence[str],
+    axis_sizes: Dict[str, int],
+) -> P:
+    ndim = len(shape)
+    for pattern, trailing in _RULES:
+        if re.search(pattern, path_s):
+            spec = list(trailing)
+            break
+    else:  # pragma: no cover
+        spec = [None]
+    # pad leading scan/stack dims with None
+    if len(spec) > ndim:
+        spec = spec[-ndim:] if ndim > 0 else []
+    spec = [None] * (ndim - len(spec)) + spec
+    # drop axes not present in this mesh (e.g. no "pod" on single-pod)
+    spec = [s if (s is None or s in mesh_axes) else None for s in spec]
+    # drop axes whose size does not divide the dim (e.g. vocab 50280 % 16):
+    # replication is always a correct fallback.
+    spec = [
+        s if (s is None or shape[i] % axis_sizes[s] == 0) else None
+        for i, s in enumerate(spec)
+    ]
+    return P(*spec)
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a (ShapeDtypeStruct) parameter tree."""
+    axes = mesh.axis_names
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        return _spec_for(_path_str(path), leaf.shape, axes, sizes)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh)
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(batch_shape: Dict[str, Any], mesh: Mesh, *, global_batch: int) -> Any:
+    """Shard the batch dim over ('pod','data') when divisible, else replicate."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    lead = dp if (dp and global_batch % dp_size == 0) else ()
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        return P(lead, *([None] * (nd - 1))) if nd else P()
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cache_shape: Dict[str, Any], mesh: Mesh, cfg: ModelConfig,
+                *, batch: int) -> Any:
+    """KV/state cache sharding: batch over dp (when divisible), the long
+    sequence dim over 'model' (sequence-parallel cache, consumed by the
+    flash-combine decode attention in repro.parallel.sp_attention)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and batch % dp_size == 0) else None
+    m = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:  # t counter
+            return P()
+        if name in ("k", "v"):          # (L|apps, B, Hkv, S, hd)
+            s = leaf.shape[3]
+            return P(None, bspec, None, "model" if s % m == 0 else None, None)
+        if name in ("xk", "xv"):        # cross-attn (L, B, H, S_enc, hd): small
+            return P(None, bspec, None, None, None)
+        if name == "ckv":               # (L, B, S, r)
+            s = leaf.shape[2]
+            return P(None, bspec, "model" if s % m == 0 else None, None)
+        if name == "krope":             # (L, B, 1, S, dr)
+            s = leaf.shape[3]
+            return P(None, bspec, None, "model" if s % m == 0 else None, None)
+        if name == "first_ckv":         # (B, S, r)
+            s = leaf.shape[1]
+            return P(bspec, "model" if s % m == 0 else None, None)
+        if name == "first_krope":       # (B, 1, S, dr)
+            s = leaf.shape[2]
+            return P(bspec, None, "model" if s % m == 0 else None, None)
+        if name in ("conv", "ssm"):     # SSM states: batch only
+            return P(None, bspec, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

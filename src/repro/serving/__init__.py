@@ -1,0 +1,5 @@
+"""Serving substrate: samplers (DPP-based top-k), the batched generation
+engine, and cache utilities shared by every architecture family."""
+
+from repro.serving.sampler import SamplerConfig, sample_logits  # noqa: F401
+from repro.serving.engine import ServingEngine, Request, Completion  # noqa: F401

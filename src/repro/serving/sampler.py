@@ -1,0 +1,72 @@
+"""Token samplers.  Top-k runs on the DPP layer (SortByKey) — the paper's
+vocabulary reused in the LM stack (DESIGN.md §4).
+
+All samplers take fp32 logits (B, V) and a PRNG key; everything is
+jit-compatible with static SamplerConfig.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> disabled
+    top_p: float = 1.0            # 1 -> disabled
+
+
+def greedy(logits: Array) -> Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _top_k_mask(logits: Array, k: int) -> Array:
+    """Mask all but the k largest logits per row, via SortByKey (DPP).
+
+    Sorting the negated logits ascending puts the top-k first; the k-th
+    value per row is the admission threshold.
+    """
+    neg = -logits
+    (sorted_neg,) = jax.vmap(lambda r: dpp.sort_by_key(r))(neg)
+    kth = -sorted_neg[:, k - 1]
+    return jnp.where(logits >= kth[:, None], logits, -jnp.inf)
+
+
+def _top_p_mask(logits: Array, p: float) -> Array:
+    """Nucleus sampling mask: smallest set of tokens with cumulative
+    probability >= p.  SortByKey + Scan (DPP idiom)."""
+    def one(row):
+        key = -row
+        lane = jnp.arange(row.shape[0], dtype=jnp.int32)
+        s_key, s_idx = dpp.sort_by_key(key, lane)
+        probs = jax.nn.softmax(-s_key)
+        cum = dpp.scan_(probs, exclusive=True)
+        keep_sorted = cum < p          # always keeps the argmax (cum[0]=0)
+        keep = jnp.zeros_like(keep_sorted).at[s_idx].set(keep_sorted)
+        return jnp.where(keep, row, -jnp.inf)
+
+    return jax.vmap(one)(logits)
+
+
+def sample_logits(
+    logits: Array, key: Array, config: SamplerConfig = SamplerConfig()
+) -> Array:
+    """logits (B, V) float32 -> token ids (B,) int32."""
+    logits = logits.astype(jnp.float32)
+    if config.temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / config.temperature
+    if config.top_k > 0:
+        logits = _top_k_mask(logits, config.top_k)
+    if config.top_p < 1.0:
+        logits = _top_p_mask(logits, config.top_p)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

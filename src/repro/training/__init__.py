@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpointing,
+fault tolerance, and gradient compression — all built in JAX (no external
+optimizer/checkpoint libraries)."""
+
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+)
+from repro.training.train_step import (  # noqa: F401
+    TrainStepConfig,
+    make_train_step,
+    make_sharded_train_state,
+)

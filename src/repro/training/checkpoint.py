@@ -1,0 +1,301 @@
+"""Sharded, atomic, elastic checkpointing (no external ckpt library).
+
+Layout (one directory per step)::
+
+    <dir>/step_000120/
+        manifest.json      # pytree structure, shapes, dtypes, spec strings,
+                           # content hashes, mesh shape, step metadata
+        <leaf-id>.npy      # one file per leaf (full array, fp32/bf16-as-u16)
+    <dir>/step_000120.COMMITTED   # atomicity marker (written last)
+
+Design choices for the 1000+-node posture:
+
+* **atomic commit** — leaves are written to a temp dir, fsync'd, renamed,
+  and only then the COMMITTED marker is created; restore ignores any
+  step directory without its marker, so a mid-save preemption can never
+  corrupt the restore path (tested by failure injection).
+* **elastic re-mesh** — leaves are saved as *full* (unsharded) arrays plus
+  their PartitionSpec strings; restore re-shards onto whatever mesh the
+  restarted job brings up (different device count / topology), which is
+  what lets a 512-chip job resume on 256 chips after losing a pod.
+  On a real fleet each host writes only its owned shards (same manifest
+  format, per-shard files); the full-array form keeps this container's
+  tests honest while exercising the identical restore path.
+* **integrity** — every leaf file carries a sha256 in the manifest;
+  restore verifies before installing (a half-written file fails loudly).
+* **retention** — ``keep_last`` commits are retained, older ones pruned.
+* **async** — ``AsyncCheckpointer`` snapshots to host memory on-thread
+  (device->host copy is the only blocking part) and writes in a background
+  thread, overlapping the dump with subsequent train steps.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_BF16_EXT = "bf16.npy"  # stored as uint16 view
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat leaves with stable ids
+# ---------------------------------------------------------------------------
+
+
+def _flatten(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        name = "_".join(_key_str(k) for k in path) or "root"
+        out.append((name, leaf))
+    return out, treedef
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def _spec_to_str(spec: Optional[P]) -> str:
+    if spec is None:
+        return ""
+    return json.dumps([list(e) if isinstance(e, tuple) else e for e in spec])
+
+
+def _spec_from_str(s: str) -> Optional[P]:
+    if not s:
+        return None
+    entries = json.loads(s)
+    return P(*(tuple(e) if isinstance(e, list) else e for e in entries))
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+
+def _to_numpy(x) -> Tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def save_checkpoint(
+    directory: str | os.PathLike,
+    step: int,
+    state: PyTree,
+    *,
+    specs: Optional[PyTree] = None,
+    mesh: Optional[Mesh] = None,
+    keep_last: int = 3,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Path:
+    """Atomically persist ``state`` for ``step``.  Returns the commit dir."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    marker = directory / f"step_{step:08d}.COMMITTED"
+
+    leaves, _ = _flatten(state)
+    spec_leaves: List[Optional[P]]
+    if specs is not None:
+        spec_flat, _ = _flatten(specs)
+        spec_leaves = [s for _, s in spec_flat]
+    else:
+        spec_leaves = [None] * len(leaves)
+
+    tmp = Path(tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=directory))
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None,
+        "extra": extra or {},
+        "leaves": [],
+    }
+    try:
+        for (name, leaf), spec in zip(leaves, spec_leaves):
+            arr, dtype_name = _to_numpy(leaf)
+            fname = f"{name}.npy"
+            fpath = tmp / fname
+            with open(fpath, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "dtype": dtype_name,
+                    "shape": list(arr.shape),
+                    "sha256": digest,
+                    "spec": _spec_to_str(spec),
+                }
+            )
+        mpath = tmp / "manifest.json"
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        marker.touch()
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    _prune(directory, keep_last)
+    return final
+
+
+def _prune(directory: Path, keep_last: int) -> None:
+    commits = sorted(
+        int(m.name[len("step_"):-len(".COMMITTED")])
+        for m in directory.glob("step_*.COMMITTED")
+    )
+    for old in commits[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(directory / f"step_{old:08d}", ignore_errors=True)
+        (directory / f"step_{old:08d}.COMMITTED").unlink(missing_ok=True)
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    directory = Path(directory)
+    commits = [
+        int(m.name[len("step_"):-len(".COMMITTED")])
+        for m in directory.glob("step_*.COMMITTED")
+        if (directory / m.name[: -len(".COMMITTED")]).is_dir()
+    ]
+    return max(commits) if commits else None
+
+
+def restore_checkpoint(
+    directory: str | os.PathLike,
+    like: PyTree,
+    *,
+    step: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    verify: bool = True,
+) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore onto the *current* mesh (elastic re-mesh is implicit: leaves
+    are saved unsharded and re-placed via each leaf's saved spec projected
+    onto ``mesh``).  ``like`` supplies the target pytree structure.
+
+    Returns (step, state, extra-metadata).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    cdir = directory / f"step_{step:08d}"
+    if not (directory / f"step_{step:08d}.COMMITTED").exists():
+        raise FileNotFoundError(f"checkpoint step {step} not committed")
+
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+
+    leaves, treedef = _flatten(like)
+    restored = []
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    for name, leaf in leaves:
+        entry = by_name.get(name)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        fpath = cdir / entry["file"]
+        raw = fpath.read_bytes()
+        if verify:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != entry["sha256"]:
+                raise IOError(f"hash mismatch for {name}: corrupt checkpoint")
+        arr = np.load(fpath)
+        if entry["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs model {np.shape(leaf)}"
+            )
+        if mesh is not None:
+            spec = _spec_from_str(entry["spec"]) or P()
+            # elastic projection: drop axes the new mesh doesn't have
+            spec = P(
+                *(
+                    (tuple(a for a in e if a in axis_names) or None)
+                    if isinstance(e, tuple)
+                    else (e if (e is None or e in axis_names) else None)
+                    for e in spec
+                )
+            )
+            restored.append(
+                jax.device_put(arr, NamedSharding(mesh, spec))
+            )
+        else:
+            restored.append(jnp.asarray(arr))
+    state = jax.tree.unflatten(treedef, restored)
+    return step, state, manifest.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# async wrapper
+# ---------------------------------------------------------------------------
+
+
+class AsyncCheckpointer:
+    """Overlaps the disk dump with training: ``save`` snapshots to host
+    memory synchronously (the device->host copy) and writes on a worker
+    thread.  ``wait()`` joins the in-flight write (call before exit and
+    before starting a save for the same directory)."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep_last: int = 3):
+        self.directory = Path(directory)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: PyTree, *, specs=None, mesh=None, extra=None):
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(
+                    self.directory, step, host_state,
+                    specs=specs, mesh=mesh, keep_last=self.keep_last, extra=extra,
+                )
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

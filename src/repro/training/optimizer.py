@@ -1,0 +1,138 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and warmup +
+cosine decay — implemented directly (no optax) so every state tensor can be
+sharded with the same rules as its parameter.
+
+State layout mirrors the parameter pytree: ``m`` and ``v`` are pytrees with
+identical structure (and therefore identical ``NamedSharding``), plus a
+scalar step counter.  Keeping optimizer moments in fp32 while parameters are
+bf16 is the standard mixed-precision recipe; the fp32 master copy is the
+moments' co-located ``master`` tree (optional, enabled by default).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1          # cosine floor as a fraction of lr
+    use_master_fp32: bool = True      # keep an fp32 master parameter copy
+
+
+class AdamWState(NamedTuple):
+    step: Array            # scalar int32
+    m: PyTree              # fp32, same structure as params
+    v: PyTree              # fp32
+    master: Optional[PyTree]  # fp32 master params (None if disabled)
+
+
+def adamw_init(params: PyTree, config: AdamWConfig) -> AdamWState:
+    zeros32 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (
+        # explicit copy: with fp32 params, astype would alias the parameter
+        # buffer and break donation (donate-same-buffer-twice)
+        jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+        if config.use_master_fp32
+        else None
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros32,
+        v=jax.tree.map(jnp.copy, zeros32),
+        master=master,
+    )
+
+
+def lr_schedule(step: Array, config: AdamWConfig) -> Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / jnp.maximum(config.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step_f - config.warmup_steps)
+        / jnp.maximum(config.total_steps - config.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    floor = config.min_lr_frac
+    return config.lr * warm * (floor + (1.0 - floor) * cos)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay applies to matrices only — embeddings and >=2D weights —
+    never to norms/biases (1D leaves)."""
+    return True  # resolved per-leaf by ndim below
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    config: AdamWConfig,
+) -> Tuple[PyTree, AdamWState, Dict[str, Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads32, gnorm = clip_by_global_norm(grads32, config.grad_clip)
+
+    step = state.step + 1
+    lr = lr_schedule(step, config)
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads32)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads32)
+
+    base = state.master if state.master is not None else params
+
+    def upd(p32, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        wd = config.weight_decay if p32.ndim >= 2 else 0.0
+        return p32 - lr * (delta + wd * p32.astype(jnp.float32))
+
+    new_master = jax.tree.map(
+        lambda p, m, v: upd(p.astype(jnp.float32), m, v), base, new_m, new_v
+    )
+    new_params = jax.tree.map(
+        lambda p_old, p_new: p_new.astype(p_old.dtype), params, new_master
+    )
+
+    new_state = AdamWState(
+        step=step,
+        m=new_m,
+        v=new_v,
+        master=new_master if config.use_master_fp32 else None,
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

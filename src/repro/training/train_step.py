@@ -1,0 +1,319 @@
+"""The jit'd training step: loss -> grads -> (optional cross-pod codec)
+-> AdamW, with microbatch gradient accumulation and donated buffers.
+
+Distribution contract (DESIGN.md §6):
+
+* parameters/optimizer state are sharded by ``parallel.sharding.param_specs``
+  (FSDP over ``data`` + TP over ``model``; replicated over ``pod``);
+* the batch is sharded over ``('pod', 'data')``;
+* with ``grad_codec != 'none'`` the step is wrapped in ``shard_map`` manual
+  over **only** the ``pod`` axis (``data``/``model`` stay compiler-auto), so
+  the cross-DCN gradient hop runs through the bf16/int8 codec while
+  intra-pod reduction remains XLA's reduce-scatter/all-gather pipeline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_api
+from repro.models.transformer import ParallelRuntime
+from repro.parallel import sharding as SH
+from repro.training import compression
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1             # gradient-accumulation chunks
+    grad_codec: str = "none"          # none | bf16 | int8 (cross-pod hop)
+    seed: int = 0
+
+
+class TrainState:
+    """Bundles params + optimizer state (a plain pytree-of-pytrees)."""
+
+    def __init__(self, params: PyTree, opt: AdamWState):
+        self.params = params
+        self.opt = opt
+
+    def as_tree(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt": self.opt}
+
+
+def make_runtime(mesh: Optional[Mesh]) -> Optional[ParallelRuntime]:
+    if mesh is None:
+        return None
+    import os
+    return ParallelRuntime(
+        mesh=mesh,
+        dp_axes=SH.dp_axes(mesh),
+        tp_axis="model" if "model" in mesh.axis_names else "",
+        pin_attn_seq=os.environ.get("REPRO_PIN_ATTN", "1") == "1",
+    )
+
+
+# ---------------------------------------------------------------------------
+# state construction (sharded init without materializing on one device)
+# ---------------------------------------------------------------------------
+
+
+def state_shape(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Dict[str, Any]:
+    """eval_shape of the full train state (params + AdamW moments)."""
+    api = get_api(cfg)
+    params = jax.eval_shape(lambda k: api.init(k, cfg), jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpecs for the full state — moments/master inherit their
+    parameter's spec; the step counter is replicated."""
+    shapes = state_shape(cfg, opt_cfg)
+    pspecs = SH.param_specs(shapes["params"], mesh)
+    opt_specs = AdamWState(
+        step=P(),
+        m=pspecs,
+        v=pspecs,
+        master=pspecs if opt_cfg.use_master_fp32 else None,
+    )
+    return {"params": pspecs, "opt": opt_specs}
+
+
+def make_sharded_train_state(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    ts_cfg: TrainStepConfig = TrainStepConfig(),
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (state_tree, state_specs).  With a mesh, init is jit'd with
+    out_shardings so each device materializes only its shard."""
+    api = get_api(cfg)
+
+    def init_all(key):
+        params = api.init(key, cfg)
+        return {"params": params, "opt": adamw_init(params, ts_cfg.optimizer)}
+
+    key = jax.random.PRNGKey(ts_cfg.seed)
+    if mesh is None:
+        return init_all(key), None
+    specs = state_specs(cfg, ts_cfg.optimizer, mesh)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    state = jax.jit(init_all, out_shardings=shardings)(key)
+    return state, specs
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+
+def _microbatch(batch: Dict[str, Array], n: int, i: Array) -> Dict[str, Array]:
+    def slice_one(x: Array) -> Array:
+        b = x.shape[0]
+        mb = b // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    return jax.tree.map(slice_one, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    ts_cfg: TrainStepConfig = TrainStepConfig(),
+    *,
+    state_partition: Optional[Dict[str, Any]] = None,
+    batch_shape: Optional[Dict[str, Any]] = None,
+) -> Callable[[Dict[str, Any], Dict[str, Array]], Tuple[Dict[str, Any], Dict[str, Array]]]:
+    """Builds the jit'd ``step(state, batch) -> (state, metrics)``.
+
+    ``state_partition``/``batch_shape`` are needed only when a mesh is given
+    (they pin in/out shardings so ``.lower()`` works from ShapeDtypeStructs).
+    """
+    api = get_api(cfg)
+    rt = make_runtime(mesh)
+    n_micro = ts_cfg.microbatches
+
+    def loss_fn(params, batch):
+        return api.loss(params, batch, cfg, rt)
+
+    def grads_of(params, batch):
+        if n_micro == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            mb = _microbatch(batch, n_micro, i)
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+            )
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), jnp.arange(n_micro)
+        )
+        inv = 1.0 / n_micro
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def apply_grads(state, loss, grads):
+        new_params, new_opt, metrics = adamw_update(
+            grads, state["opt"], state["params"], ts_cfg.optimizer
+        )
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    use_codec = (
+        ts_cfg.grad_codec != "none"
+        and mesh is not None
+        and "pod" in mesh.axis_names
+    )
+
+    if not use_codec:
+        def step(state, batch):
+            loss, grads = grads_of(state["params"], batch)
+            return apply_grads(state, loss, grads)
+    else:
+        n_pods = mesh.shape["pod"]
+
+        # Per-pod gradients via vmap over pod-chunks of the batch, with the
+        # leading chunk dim sharded over 'pod' — each pod computes only its
+        # own grads under auto-SPMD, and the codec'd sum over that dim is
+        # the one cross-DCN collective (int8: an int accumulation of
+        # quantized grads on a shared absmax grid; bf16: half-width).
+        # Inside the vmap, 'pod' is the vmapped dim, so the runtime keeps
+        # only the intra-pod dp axes.
+        rt_inner = ParallelRuntime(
+            mesh=mesh,
+            dp_axes=tuple(a for a in SH.dp_axes(mesh) if a != "pod"),
+            tp_axis="model" if "model" in mesh.axis_names else "",
+        )
+
+        def grads_one_pod(params, pod_batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss(p, pod_batch, cfg, rt_inner)
+            )(params)
+            return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        pspecs_params = state_partition["params"]
+
+        def _pod_sharded(tree):
+            """Constrain a per-pod-stacked tree: leading dim on 'pod',
+            remaining dims per the parameter's own spec."""
+            def one(x, spec):
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P("pod", *spec))
+                )
+            return jax.tree.map(one, tree, pspecs_params, is_leaf=None)
+
+        def step(state, batch):
+            pod_batch = jax.tree.map(
+                lambda x: x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:]),
+                batch,
+            )
+            losses, pod_grads = jax.vmap(grads_one_pod, in_axes=(None, 0))(
+                state["params"], pod_batch
+            )
+            pod_grads = _pod_sharded(pod_grads)
+            loss = jnp.mean(losses)
+
+            if ts_cfg.grad_codec == "bf16":
+                grads = jax.tree.map(
+                    lambda g: jnp.sum(g.astype(jnp.bfloat16).astype(jnp.float32), axis=0)
+                    / n_pods,
+                    pod_grads,
+                )
+            else:  # int8 stochastic rounding on a shared absmax grid
+                key0 = jax.random.fold_in(
+                    jax.random.PRNGKey(ts_cfg.seed), state["opt"].step
+                )
+                leaves, treedef = jax.tree.flatten(pod_grads)
+                keys = jax.random.split(key0, len(leaves))
+
+                def enc_dec(g, k):
+                    scale = jnp.maximum(jnp.max(jnp.abs(g)) / 127.0, 1e-30)
+                    noise = jax.random.uniform(k, g.shape)
+                    q = jnp.floor(g / scale + noise).astype(jnp.int8)
+                    summed = jnp.sum(q.astype(jnp.int32), axis=0)
+                    return summed.astype(jnp.float32) * scale / n_pods
+
+                grads = jax.tree.unflatten(
+                    treedef, [enc_dec(g, k) for g, k in zip(leaves, keys)]
+                )
+            return apply_grads(state, loss, grads)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,))
+
+    assert state_partition is not None and batch_shape is not None
+    gb = _gb(batch_shape)
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_partition, is_leaf=_is_spec
+    )
+    batch_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        SH.batch_specs(batch_shape, mesh, global_batch=gb),
+        is_leaf=_is_spec,
+    )
+    metric_shardings = {
+        "loss": NamedSharding(mesh, P()),
+        "grad_norm": NamedSharding(mesh, P()),
+        "lr": NamedSharding(mesh, P()),
+    }
+    return jax.jit(
+        step,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, metric_shardings),
+        donate_argnums=(0,),
+    )
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _pod_view(spec: P) -> P:
+    """Project a spec onto the 'pod' axis only (manual-pod shard_map specs
+    may not mention auto axes); params are pod-replicated -> all-None."""
+    def clean(entry):
+        if isinstance(entry, (tuple, list)):
+            return "pod" if "pod" in entry else None
+        return "pod" if entry == "pod" else None
+
+    return P(*(clean(e) for e in spec))
+
+
+def _pod_only(spec: P) -> P:
+    """Keep only the 'pod' factor of each entry (batch specs inside manual)."""
+    def clean(entry):
+        if isinstance(entry, (tuple, list)):
+            return "pod" if "pod" in entry else None
+        return "pod" if entry == "pod" else None
+
+    return P(*(clean(e) for e in spec))
+
+
+def _gb(batch_shape: Dict[str, Any]) -> int:
+    return int(next(iter(jax.tree.leaves(batch_shape))).shape[0])

@@ -1,0 +1,154 @@
+"""Per-kernel validation: Pallas (interpret mode) vs. pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mrf_energy import mrf_min_energy_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 2500])
+@pytest.mark.parametrize("num_segments", [1, 5, 513])
+@pytest.mark.parametrize("op", ["add", "min"])
+def test_segment_reduce_shapes(n, num_segments, op):
+    rng = np.random.RandomState(n + num_segments)
+    vals = jnp.asarray(rng.randn(n), jnp.float32)
+    segs = jnp.asarray(rng.randint(0, num_segments, n), jnp.int32)
+    got = segment_reduce_pallas(vals, segs, num_segments, op, interpret=True)
+    want = ref.segment_reduce(vals, segs, num_segments, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=20),
+)
+def test_segment_reduce_property(n, num_segments):
+    rng = np.random.RandomState(n * 31 + num_segments)
+    vals = jnp.asarray(rng.randn(n) * 10, jnp.float32)
+    segs = jnp.asarray(rng.randint(0, num_segments, n), jnp.int32)
+    got = segment_reduce_pallas(vals, segs, num_segments, "add", interpret=True)
+    want = np.zeros(num_segments, np.float32)
+    np.add.at(want, np.asarray(segs), np.asarray(vals))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mrf_min_energy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 2048, 5000])
+def test_mrf_min_energy_matches_ref(n):
+    rng = np.random.RandomState(n)
+    y = jnp.asarray(rng.uniform(0, 255, n), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 2, n), jnp.float32)
+    nall = jnp.asarray(rng.randint(2, 20, n), jnp.float32)
+    n1 = jnp.asarray(rng.randint(0, 20, n) % np.asarray(nall), jnp.float32)
+    xf = jnp.asarray(rng.randint(0, 2, n), jnp.float32)
+    mu = jnp.asarray([80.0, 170.0])
+    sigma = jnp.asarray([25.0, 30.0])
+    beta = 0.75
+
+    got_e, got_a = mrf_min_energy_pallas(y, w, n1, nall, xf, mu, sigma, beta, interpret=True)
+    want_e, want_a = ref.mrf_min_energy(y, w, n1, nall, xf, mu, sigma, beta)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(want_e), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+def test_mrf_min_energy_matches_engine():
+    """The fused kernel must agree with the engine's label_energies +
+    min_energies_static composition on a real problem."""
+    from repro.core import synthetic
+    from repro.core.pmrf import initialize
+    from repro.core.pmrf import em as em_mod
+    from repro.core.pmrf import energy as energy_mod
+    from repro.core import dpp
+
+    vol = synthetic.make_synthetic_volume(seed=1, n_slices=1, shape=(48, 48))
+    prob = initialize(np.asarray(vol.images[0]), overseg_grid=(6, 6))
+    hoods, model = prob.hoods, prob.model
+    labels, mu, sigma = em_mod.init_params(jax.random.PRNGKey(0), prob.graph.n_regions)
+
+    energies = energy_mod.label_energies(hoods, model, labels, mu, sigma)
+    want_e, want_a = energy_mod.min_energies_static(energies)
+
+    v = hoods.vertex
+    y = model.region_mean[v]
+    w = model.region_weight[v] * hoods.valid.astype(jnp.float32)
+    x = labels[v]
+    ones = hoods.valid.astype(jnp.float32)
+    n1 = dpp.reduce_by_key(hoods.hood_id, ones * x, hoods.n_hoods + 1, op="add")
+    nall = dpp.reduce_by_key(hoods.hood_id, ones, hoods.n_hoods + 1, op="add")
+    sig = jnp.maximum(sigma, model.sigma_min)
+
+    got_e, got_a = mrf_min_energy_pallas(
+        y, w, n1[hoods.hood_id], nall[hoods.hood_id], x.astype(jnp.float32),
+        mu, sig, float(model.beta), interpret=True,
+    )
+    valid = np.asarray(hoods.valid)
+    np.testing.assert_allclose(
+        np.asarray(got_e)[valid], np.asarray(want_e)[valid], rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(got_a)[valid], np.asarray(want_a)[valid])
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d",
+    [
+        (1, 2, 2, 128, 32),   # MHA
+        (2, 4, 2, 256, 64),   # GQA group=2
+        (1, 8, 1, 128, 16),   # MQA
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, s, d, causal):
+    rng = np.random.RandomState(hq * s + d)
+    q = jnp.asarray(rng.randn(b, hq, s, d), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 2, 128, 32), dtype) * 0.3
+    k = jnp.asarray(rng.randn(1, 2, 128, 32), dtype) * 0.3
+    v = jnp.asarray(rng.randn(1, 2, 128, 32), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), causal=True
+    )
+    assert got.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_long_seq_blocks():
+    """Block sizes that tile unevenly across heads/sequence still agree."""
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 2, 512, 64), jnp.float32) * 0.2
+    k = jnp.asarray(rng.randn(1, 1, 512, 64), jnp.float32) * 0.2
+    v = jnp.asarray(rng.randn(1, 1, 512, 64), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=128, block_k=256, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)

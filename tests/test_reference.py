@@ -1,0 +1,65 @@
+"""Reference-engine equivalence: the serial baseline, the coarse
+(OpenMP-analogue) engine, and the DPP engine must agree — the paper's
+correctness premise behind its runtime comparisons."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import pipeline, reference
+
+
+@pytest.fixture(scope="module")
+def problem():
+    vol = synthetic.make_synthetic_volume(seed=0, n_slices=1, shape=(64, 64))
+    prob = pipeline.initialize(np.asarray(vol.images[0]), overseg_grid=(8, 8))
+    labels0, mu0, sigma0 = em_mod.quantile_init(
+        prob.graph.region_mean, prob.graph.n_regions
+    )
+    return prob, np.asarray(labels0), np.asarray(mu0), np.asarray(sigma0)
+
+
+def test_serial_and_coarse_agree(problem):
+    prob, labels0, mu0, sigma0 = problem
+    a = reference.serial_em(prob.hoods, prob.model, labels0, mu0, sigma0)
+    b = reference.coarse_em(prob.hoods, prob.model, labels0, mu0, sigma0)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_allclose(a.mu, b.mu, rtol=1e-5)
+    assert a.em_iters == b.em_iters
+
+
+def test_dpp_engine_matches_references(problem):
+    prob, labels0, mu0, sigma0 = problem
+    ref = reference.coarse_em(prob.hoods, prob.model, labels0, mu0, sigma0)
+    dpp = em_mod.run_em(
+        prob.hoods, prob.model,
+        jnp.asarray(labels0), jnp.asarray(mu0), jnp.asarray(sigma0),
+        em_mod.EMConfig(mode="static"),
+    )
+    agree = (np.asarray(dpp.labels) == ref.labels).mean()
+    # engines may tie-break label flips differently on degenerate regions
+    # (paper §4.2.2 observes the same between its two implementations);
+    # demand near-total agreement and matched parameters
+    assert agree > 0.98, agree
+    np.testing.assert_allclose(np.asarray(dpp.mu), ref.mu, rtol=0.05)
+
+
+def test_faithful_mode_matches_static(problem):
+    prob, labels0, mu0, sigma0 = problem
+    outs = {}
+    for mode in ("faithful", "static"):
+        outs[mode] = em_mod.run_em(
+            prob.hoods, prob.model,
+            jnp.asarray(labels0), jnp.asarray(mu0), jnp.asarray(sigma0),
+            em_mod.EMConfig(mode=mode),
+        )
+    np.testing.assert_array_equal(
+        np.asarray(outs["faithful"].labels), np.asarray(outs["static"].labels)
+    )
+    np.testing.assert_allclose(
+        np.asarray(outs["faithful"].mu), np.asarray(outs["static"].mu), rtol=1e-6
+    )
+    assert int(outs["faithful"].em_iters) == int(outs["static"].em_iters)
