@@ -6,6 +6,8 @@ One section per paper table/figure + the framework benches:
     fig3                coarse-parallel reference vs DPP (paper Fig. 3)
     fig4                per-DPP breakdown + size scaling (paper Fig. 4)
     faithful_vs_static  beyond-paper sort-hoisting ablation
+    pmrf                per-mode EM timing on the paper config; emits
+                        BENCH_pmrf.json for cross-PR perf tracking
     kernels             Pallas kernels vs jnp oracles
     roofline            (arch x shape) roofline table from the dry-run
 
@@ -18,7 +20,9 @@ import sys
 import time
 import traceback
 
-SECTIONS = ("table1", "fig3", "fig4", "faithful_vs_static", "kernels", "roofline")
+SECTIONS = (
+    "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "kernels", "roofline"
+)
 
 
 def main() -> None:

@@ -32,7 +32,10 @@ class PMRFConfig:
     convergence_tol: float = 1.0e-4   # the paper's threshold
     k_hop: int = 1                    # k=1 neighborhoods
     beta: float = 0.75                # smoothness weight
-    mode: str = "faithful"            # the paper's primitive sequence
+    mode: str = "faithful"            # the paper's primitive sequence;
+                                      # "static" / "static-pallas" are the
+                                      # beyond-paper TPU modes (DESIGN.md §2-3)
+    backend: str = "auto"             # kernel dispatch (kernels/ops.py)
 
 
 CONFIG = PMRFConfig()

@@ -194,13 +194,33 @@ def sort_by_key(
     return _timed("SortByKey", run)
 
 
-def compound_key(major: Array, minor: Array, minor_span: int) -> Array:
-    """Pack (major, minor) int pairs into one sortable int64-safe key.
+def compound_key(
+    major: Array, minor: Array, minor_span: int, *, major_span: Optional[int] = None
+) -> Array:
+    """Pack (major, minor) int pairs into one sortable integer key.
 
     ``minor_span`` must be a static upper bound (exclusive) on ``minor``.
     Used for the paper's (cliqueId, vertexId) pair sorts.
+
+    Overflow safety: a plain ``astype(jnp.int64)`` silently degrades to
+    int32 when ``jax_enable_x64`` is off, corrupting keys for large
+    (major, minor) spaces.  We pack in the widest *enabled* integer dtype
+    and, when ``major_span`` (exclusive bound on ``major``) is supplied,
+    statically verify the packed key space fits — raising instead of
+    silently mis-sorting.  Callers with a key space beyond int32 and x64
+    disabled should use ``sort_by_key(..., num_keys=2)`` (two-level
+    lexicographic sort) instead.
     """
-    return major.astype(jnp.int64) * minor_span + minor.astype(jnp.int64)
+    dtype = jax.dtypes.canonicalize_dtype(jnp.int64)
+    if major_span is not None:
+        max_key = int(major_span) * int(minor_span) - 1
+        if max_key > jnp.iinfo(dtype).max:
+            raise OverflowError(
+                f"compound_key space {major_span} x {minor_span} does not fit "
+                f"{dtype.name}; enable jax_enable_x64 or use "
+                "sort_by_key(num_keys=2) for a two-level sort"
+            )
+    return major.astype(dtype) * minor_span + minor.astype(dtype)
 
 
 def reduce_by_key(
@@ -210,15 +230,59 @@ def reduce_by_key(
     op: str = "add",
     *,
     indices_are_sorted: bool = False,
+    backend: Optional[str] = None,
 ) -> Array:
     """ReduceByKey: segmented reduction to ``num_segments`` buckets.
 
     TPU-native form: callers supply segment ids directly (no sort required —
     see DESIGN.md §2).  For the paper-faithful path, first ``sort_by_key``
     then pass ``indices_are_sorted=True``.
+
+    ``backend`` routes through the kernel dispatch layer (DESIGN.md §3):
+    ``None`` keeps the XLA ``jax.ops.segment_*`` lowering; a pallas backend
+    name (or ``"auto"``) dispatches to the MXU one-hot segment-reduce
+    kernel for 1-D float values with ``op`` in {add, min}.
     """
 
     def run():
+        if backend is not None:
+            from repro.kernels import ops as kops  # lazy: keep dpp import light
+
+            resolved = kops.resolve_backend(backend)
+            if resolved != "xla":
+                supported = (
+                    op in ("add", "min")
+                    and values.ndim == 1
+                    and jnp.issubdtype(values.dtype, jnp.floating)
+                )
+                # Auto-routing guard: the one-hot kernel does O(S*N) work,
+                # so segments~values-sized reductions (e.g. the faithful
+                # mode's per-element min over capacity+1 segments) stay on
+                # XLA regardless of the requested backend.
+                if supported and num_segments <= kops.MAX_REDUCE_SEGMENTS:
+                    return kops.segment_reduce(
+                        values, segment_ids, num_segments, op, backend=resolved
+                    )
+                # Surface the downgrade (at trace time) so parity/benchmark
+                # runs that *explicitly* named a pallas backend (argument,
+                # env var, or override) know this reduction ran on XLA
+                # instead; auto-detected backends fall back silently (the
+                # fallback is the intended routing).
+                if kops.backend_explicitly_requested(backend):
+                    import warnings
+
+                    reason = (
+                        f"num_segments={num_segments} exceeds "
+                        f"MAX_REDUCE_SEGMENTS={kops.MAX_REDUCE_SEGMENTS}"
+                        if supported
+                        else f"op={op!r}/dtype={values.dtype}/ndim={values.ndim}"
+                        " unsupported by the pallas kernel"
+                    )
+                    warnings.warn(
+                        f"reduce_by_key: {reason}; staying on XLA instead of "
+                        f"{resolved!r}",
+                        stacklevel=3,
+                    )
         kwargs = dict(
             num_segments=num_segments, indices_are_sorted=indices_are_sorted
         )

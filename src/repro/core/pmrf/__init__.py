@@ -1,10 +1,10 @@
 """DPP-PMRF: the paper's probabilistic-graphical-model optimizer."""
 
 from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
-from repro.core.pmrf.em import EMConfig, EMResult, run_em
-from repro.core.pmrf.energy import EnergyModel, make_energy_model
+from repro.core.pmrf.em import EMConfig, EMResult, run_em, run_em_batched
+from repro.core.pmrf.energy import EnergyModel, make_energy_model, pad_model
 from repro.core.pmrf.graph import RegionGraph, build_region_graph
-from repro.core.pmrf.hoods import Hoods, build_hoods
+from repro.core.pmrf.hoods import Hoods, build_hoods, pad_hoods
 from repro.core.pmrf.pipeline import (
     Problem,
     SegmentationResult,
@@ -20,6 +20,9 @@ __all__ = [
     "EMConfig",
     "EMResult",
     "run_em",
+    "run_em_batched",
+    "pad_hoods",
+    "pad_model",
     "EnergyModel",
     "make_energy_model",
     "RegionGraph",

@@ -30,6 +30,8 @@ from functools import partial
 from typing import Tuple
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -80,7 +82,7 @@ def distributed_em(
     spec_r = P()          # replicated
 
     @partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(spec_e, spec_e, spec_e, spec_r, spec_r, spec_r, spec_r),
         out_specs=(spec_r, spec_r, spec_r, spec_r, spec_r, spec_r, spec_r),

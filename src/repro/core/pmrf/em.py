@@ -9,33 +9,47 @@ paper observes EM converges within 20 iterations and fixes that count; we
 keep 20 as the default cap and also stop early on the EM window check.
 
 Everything here is jittable with static shapes; the execution ``mode``
-("faithful" | "static") selects the per-iteration primitive sequence, see
-``energy.py``.
+("faithful" | "static" | "static-pallas") selects the per-iteration
+primitive sequence (see ``energy.py``), and ``backend`` selects the kernel
+lowering through the dispatch layer (``kernels/ops.py``, DESIGN.md §3).
+
+``run_em_batched`` vmaps the whole driver over a stack of problems padded
+to shared static shapes (DESIGN.md §9) — one trace, one XLA program for an
+entire volume.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.pmrf import energy as E
 from repro.core.pmrf.hoods import Hoods
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
 CONV_TOL = 1.0e-4
 WINDOW = 3  # the paper's L
 
+MODES = ("faithful", "static", "static-pallas")
+
+# Python-side trace counter: incremented each time run_em's body is traced
+# (never inside the compiled program).  Lets tests assert that the batched
+# multi-slice path compiles exactly one program for a whole stack.
+TRACE_COUNTS = {"run_em": 0}
+
 
 class EMConfig(NamedTuple):
     max_em_iters: int = 20
     max_map_iters: int = 10
-    mode: str = "static"          # "faithful" | "static"
+    mode: str = "static"          # "faithful" | "static" | "static-pallas"
     beta: float = 0.75
     sigma_min: float = 2.0
+    backend: str = "auto"         # kernel dispatch backend (kernels/ops.py)
 
 
 class EMResult(NamedTuple):
@@ -86,14 +100,33 @@ def quantile_init(region_mean, n_regions: int) -> tuple[Array, Array, Array]:
     labels = jnp.concatenate([labels, jnp.zeros((1,), jnp.int32)])
     return labels, mu.astype(jnp.float32), sigma
 
-def _map_step(hoods: Hoods, model: E.EnergyModel, mode: str, mu, sigma, carry: _MapCarry) -> _MapCarry:
-    energies = E.label_energies(hoods, model, carry.labels, mu, sigma)
-    if mode == "faithful":
-        min_e, arg = E.min_energies_faithful(hoods, energies)
+
+def _map_step(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    mode: str,
+    backend: str,
+    ctx: Optional[E.StaticMapContext],
+    mu,
+    sigma,
+    carry: _MapCarry,
+) -> _MapCarry:
+    if mode == "static-pallas":
+        labels, hood_e = E.map_step_fused(
+            hoods, model, ctx, carry.labels, mu, sigma, backend=backend
+        )
     else:
-        min_e, arg = E.min_energies_static(energies)
-    hood_e = E.hood_energy_sums(hoods, min_e)
-    labels = E.vote_labels(hoods, arg, hoods.n_regions)
+        # backend selects the keyed-reduction lowering here too; the vote
+        # scatter stays on XLA (scatter_ has no pallas lowering).
+        energies = E.label_energies(
+            hoods, model, carry.labels, mu, sigma, backend=backend
+        )
+        if mode == "faithful":
+            min_e, arg = E.min_energies_faithful(hoods, energies, backend=backend)
+        else:
+            min_e, arg = E.min_energies_static(energies)
+        hood_e = E.hood_energy_sums(hoods, min_e, backend=backend)
+        labels = E.vote_labels(hoods, arg, hoods.n_regions)
     hist = jnp.roll(carry.hist, shift=1, axis=0).at[0].set(hood_e)
     return _MapCarry(labels=labels, hist=hist, hood_energy=hood_e, i=carry.i + 1)
 
@@ -116,8 +149,22 @@ def run_em(
     sigma0: Array,
     config: EMConfig = EMConfig(),
 ) -> EMResult:
+    if config.mode not in MODES:
+        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    TRACE_COUNTS["run_em"] = TRACE_COUNTS.get("run_em", 0) + 1
     n_hoods = hoods.n_hoods
     mode = config.mode
+    # Threaded raw so the dispatch layer can distinguish an explicit
+    # backend request from "auto" (only explicit downgrades warn); each
+    # layer resolves at trace time — "auto" follows env/override/platform,
+    # and changing those after a trace is cached will not retrace.
+    kops.resolve_backend(config.backend)  # validate early: raises on unknown
+    backend = config.backend
+    ctx = (
+        E.make_static_context(hoods, model, backend=backend)
+        if mode == "static-pallas"
+        else None
+    )
 
     def map_loop(labels, mu, sigma):
         init = _MapCarry(
@@ -131,7 +178,11 @@ def run_em(
             all_conv = jnp.all(_window_converged(c.hist, c.i))
             return (c.i < config.max_map_iters) & ~all_conv
 
-        return jax.lax.while_loop(cond, lambda c: _map_step(hoods, model, mode, mu, sigma, c), init)
+        return jax.lax.while_loop(
+            cond,
+            lambda c: _map_step(hoods, model, mode, backend, ctx, mu, sigma, c),
+            init,
+        )
 
     def em_body(c: _EmCarry) -> _EmCarry:
         mc = map_loop(c.labels, c.mu, c.sigma)
@@ -177,3 +228,28 @@ def run_em(
         em_iters=final.em_i,
         map_iters=final.map_total,
     )
+
+
+@partial(jax.jit, static_argnames=("config",))
+def run_em_batched(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    labels0: Array,
+    mu0: Array,
+    sigma0: Array,
+    config: EMConfig = EMConfig(),
+) -> EMResult:
+    """Run EM over a stack of problems in one trace/compile (DESIGN.md §9).
+
+    All array leaves carry a leading stack axis; the ``Hoods`` static
+    fields must already be padded to shared values (``hoods.pad_hoods`` /
+    ``energy.pad_model``).  The inner ``run_em`` call inlines into this
+    trace, so the whole stack compiles exactly once; per-slice results are
+    bit-identical to individual runs because padding lanes contribute
+    exact zeros to every reduction.
+    """
+
+    def one(h, m, l0, u0, s0):
+        return run_em(h, m, l0, u0, s0, config)
+
+    return jax.vmap(one)(hoods, model, labels0, mu0, sigma0)

@@ -11,7 +11,7 @@ current label field.  This is the standard PMRF likelihood+prior energy
 ([39]); the paper's Map step computes the deviation term, and the
 smoothness enters through the neighborhood structure.
 
-Two execution modes (DESIGN.md §2, the baseline-vs-optimized axis):
+Three execution modes (DESIGN.md §2, the baseline-vs-optimized axis):
 
 * ``faithful`` — the paper's exact primitive sequence per MAP iteration:
   Gather replicated arrays (size 2|hoods|) -> Map energy -> SortByKey to
@@ -20,19 +20,27 @@ Two execution modes (DESIGN.md §2, the baseline-vs-optimized axis):
   EM-invariant, so the sort is hoisted out of the loop entirely; energies
   are laid out (2, H) and the per-element min is a reshape-free axis-min,
   the per-hood sum a segment-sum with precomputed ids.
+* ``static-pallas`` — the static mode taken to the kernel level
+  (DESIGN.md §3): every EM-invariant quantity (neighborhood sizes, vote
+  denominators, gathered region stats) is hoisted into a
+  :class:`StaticMapContext`, and the per-iteration body collapses to one
+  label-count segment reduction plus a single fused kernel launch
+  (``kernels/map_step.py``) computing energies, per-element mins, per-hood
+  energy sums, and label votes in one pass.
 
-Both modes compute identical values (tested to exact equality on CPU).
+All modes compute identical labels (tested to exact equality on CPU).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dpp
 from repro.core.pmrf.hoods import Hoods
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -78,6 +86,8 @@ def label_energies(
     mu: Array,
     sigma: Array,
     hood_counts: Tuple[Array, Array] | None = None,
+    *,
+    backend: Optional[str] = None,
 ) -> Array:
     """Energies for both candidate labels, shape (2, H_pad).
 
@@ -87,6 +97,8 @@ def label_energies(
     ``hood_counts`` optionally supplies the per-hood (label-1 count, size)
     arrays — the distributed engine passes globally psum-reduced counts
     here so shards see cross-shard neighborhood context.
+
+    ``backend`` selects the keyed-reduction lowering (DESIGN.md §3).
     """
     v = hoods.vertex
     y = model.region_mean[v]
@@ -102,8 +114,12 @@ def label_energies(
     # Per-hood label-1 counts (ReduceByKey) for the smoothness term.
     if hood_counts is None:
         ones = hoods.valid.astype(jnp.float32)
-        n1 = dpp.reduce_by_key(hoods.hood_id, ones * x, hoods.n_hoods + 1, op="add")
-        nall = dpp.reduce_by_key(hoods.hood_id, ones, hoods.n_hoods + 1, op="add")
+        n1 = dpp.reduce_by_key(
+            hoods.hood_id, ones * x, hoods.n_hoods + 1, op="add", backend=backend
+        )
+        nall = dpp.reduce_by_key(
+            hoods.hood_id, ones, hoods.n_hoods + 1, op="add", backend=backend
+        )
     else:
         n1, nall = hood_counts
     n1_e = n1[hoods.hood_id]
@@ -127,8 +143,27 @@ def label_energies(
     return jnp.stack([e0, e1])
 
 
+def pad_model(model: EnergyModel, n_regions: int) -> EnergyModel:
+    """Zero-extend the sentinel-extended region arrays to ``n_regions + 1``.
+
+    Used by the batched multi-slice path (DESIGN.md §9): appended lanes
+    have zero weight, so every weighted reduction is bit-identical to the
+    unpadded model.
+    """
+    cur = model.region_mean.shape[0] - 1
+    if n_regions < cur:
+        raise ValueError(f"cannot shrink model from {cur} to {n_regions} regions")
+    if n_regions == cur:
+        return model
+    z = jnp.zeros((n_regions - cur,), jnp.float32)
+    return model._replace(
+        region_mean=jnp.concatenate([model.region_mean, z]),
+        region_weight=jnp.concatenate([model.region_weight, z]),
+    )
+
+
 # ---------------------------------------------------------------------------
-# Per-element label minimization — the two modes
+# Per-element label minimization — the two unfused modes
 # ---------------------------------------------------------------------------
 
 
@@ -139,7 +174,9 @@ def min_energies_static(energies: Array) -> Tuple[Array, Array]:
     return min_e, arg
 
 
-def min_energies_faithful(hoods: Hoods, energies: Array) -> Tuple[Array, Array]:
+def min_energies_faithful(
+    hoods: Hoods, energies: Array, *, backend: Optional[str] = None
+) -> Tuple[Array, Array]:
     """Paper-faithful: replicate to 2|hoods| lanes via the memory-free
     Gather (oldIndex/testLabel), SortByKey so each element's two label
     energies are adjacent, ReduceByKey(Min) per element."""
@@ -153,7 +190,7 @@ def min_energies_faithful(hoods: Hoods, energies: Array) -> Tuple[Array, Array]:
 
     sk, se = dpp.sort_by_key(rep_key, rep_e)
     min_e = dpp.reduce_by_key(
-        sk, se, h_pad + 1, op="min", indices_are_sorted=True
+        sk, se, h_pad + 1, op="min", indices_are_sorted=True, backend=backend
     )[:h_pad]
     min_e = jnp.where(hoods.valid, min_e, 0.0)
     # Recover the argmin label: the min equals exactly one of the two label
@@ -163,10 +200,13 @@ def min_energies_faithful(hoods: Hoods, energies: Array) -> Tuple[Array, Array]:
     return min_e, arg
 
 
-def hood_energy_sums(hoods: Hoods, min_e: Array) -> Array:
+def hood_energy_sums(
+    hoods: Hoods, min_e: Array, *, backend: Optional[str] = None
+) -> Array:
     """ReduceByKey(Add) of per-element min energies -> per-hood sums."""
     return dpp.reduce_by_key(
-        hoods.hood_id, jnp.where(hoods.valid, min_e, 0.0), hoods.n_hoods + 1, op="add"
+        hoods.hood_id, jnp.where(hoods.valid, min_e, 0.0), hoods.n_hoods + 1,
+        op="add", backend=backend,
     )[: hoods.n_hoods]
 
 
@@ -189,6 +229,87 @@ def vote_labels(hoods: Hoods, arg: Array, n_regions: int) -> Array:
     )
     new = (votes1 * 2.0 > votes_all).astype(jnp.int32)
     return new.at[n_regions].set(0)
+
+
+# ---------------------------------------------------------------------------
+# static-pallas mode: hoisted context + single fused launch per iteration
+# ---------------------------------------------------------------------------
+
+
+class StaticMapContext(NamedTuple):
+    """EM-invariant per-element arrays hoisted out of the MAP loop.
+
+    Everything here depends only on the neighborhood structure and the
+    region statistics — not on the evolving labels — so it is computed once
+    per ``run_em`` call instead of once per MAP iteration.
+    """
+
+    y: Array          # (H_pad,) gathered region mean per hood element
+    w: Array          # (H_pad,) gathered region weight, 0 on padding
+    validf: Array     # (H_pad,) 1.0/0.0 validity mask
+    nall_e: Array     # (H_pad,) neighborhood size per element
+    votes_all: Array  # (V+1,) per-vertex total vote denominators
+
+
+def make_static_context(
+    hoods: Hoods, model: EnergyModel, *, backend: Optional[str] = None
+) -> StaticMapContext:
+    v = hoods.vertex
+    validf = hoods.valid.astype(jnp.float32)
+    nall = dpp.reduce_by_key(
+        hoods.hood_id, validf, hoods.n_hoods + 1, op="add", backend=backend
+    )
+    votes_all = dpp.scatter_(validf, v, hoods.n_regions + 1, mode="add")
+    return StaticMapContext(
+        y=model.region_mean[v],
+        w=model.region_weight[v] * validf,
+        validf=validf,
+        nall_e=nall[hoods.hood_id],
+        votes_all=votes_all,
+    )
+
+
+def map_step_fused(
+    hoods: Hoods,
+    model: EnergyModel,
+    ctx: StaticMapContext,
+    labels: Array,
+    mu: Array,
+    sigma: Array,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[Array, Array]:
+    """One MAP iteration in static-pallas mode -> (new labels, hood sums).
+
+    Per iteration this issues exactly one keyed reduction (the
+    label-dependent neighborhood count) plus one fused kernel launch; the
+    unfused static mode issues three segment-sums and two vote scatters on
+    top of the elementwise energy graph.
+    """
+    x = labels[hoods.vertex]
+    xf = x.astype(jnp.float32) * ctx.validf
+    n1 = dpp.reduce_by_key(
+        hoods.hood_id, xf, hoods.n_hoods + 1, op="add", backend=backend
+    )
+    sig = jnp.maximum(sigma, model.sigma_min)
+    _, _, hood_e, votes1 = kops.fused_map_step(
+        ctx.y,
+        ctx.w,
+        n1[hoods.hood_id],
+        ctx.nall_e,
+        xf,
+        ctx.validf,
+        hoods.hood_id,
+        hoods.vertex,
+        mu,
+        sig,
+        model.beta,
+        n_hoods=hoods.n_hoods,
+        n_vertices=hoods.n_regions + 1,
+        backend=backend,
+    )
+    new = (votes1 * 2.0 > ctx.votes_all).astype(jnp.int32)
+    return new.at[hoods.n_regions].set(0), hood_e
 
 
 def update_parameters(

@@ -107,11 +107,16 @@ def build_hoods(graph: RegionGraph, cliques: CliqueSet) -> Hoods:
     span = n + 1
     sentinel = c * span + n  # decodes to (hood_id=c, vertex=n)
 
+    # compound_key verifies the (cliqueId+1, vertexId+1) key space fits the
+    # enabled integer width (int32 when jax_enable_x64 is off) instead of
+    # silently wrapping — the sentinel (c, n) is the largest key we pack.
     key_nb = jnp.where(
-        cand_valid_nb, cid.astype(jnp.int64) * span + nb, sentinel
+        cand_valid_nb, dpp.compound_key(cid, nb, span, major_span=c + 1), sentinel
     )
     key_mem = jnp.where(
-        valid_slot, member_keys_cid.astype(jnp.int64) * span + member_keys_v, sentinel
+        valid_slot,
+        dpp.compound_key(member_keys_cid, member_keys_v, span, major_span=c + 1),
+        sentinel,
     )
     keys = jnp.concatenate([key_mem, key_nb])  # (total_capacity,)
 
@@ -153,6 +158,75 @@ def build_hoods(graph: RegionGraph, cliques: CliqueSet) -> Hoods:
         rep_test_label=rep[1],
         rep_hood_id=rep[2],
         rep_valid=rep[3],
+    )
+
+
+def pad_hoods(
+    h: Hoods,
+    *,
+    capacity: int,
+    n_hoods: int,
+    n_regions: int,
+    n_elements: int | None = None,
+) -> Hoods:
+    """Pad a ``Hoods`` to a shared (capacity, n_hoods, n_regions) bucket.
+
+    Enables the batched multi-slice path (DESIGN.md §9): every slice in a
+    stack is padded to the same static shapes so one ``run_em`` trace (and
+    one XLA program) serves the whole stack via ``vmap``.  Padding lanes
+    carry the bucket's sentinels (``vertex == n_regions``,
+    ``hood_id == n_hoods``) and are masked by ``valid``; phantom hoods
+    (ids >= the slice's real hood count) have size 0 and accumulate exact
+    zeros in every keyed reduction, so per-slice results are unchanged.
+
+    ``n_elements`` is informational metadata (valid-element count) but part
+    of the static treedef; stacking slices with different counts requires a
+    shared override — the batched path passes ``-1`` ("mixed stack").
+    """
+    if capacity < h.capacity or n_hoods < h.n_hoods or n_regions < h.n_regions:
+        raise ValueError(
+            f"bucket ({capacity}, {n_hoods}, {n_regions}) smaller than hoods "
+            f"({h.capacity}, {h.n_hoods}, {h.n_regions})"
+        )
+    if n_elements is None:
+        n_elements = h.n_elements
+    if (capacity, n_hoods, n_regions, n_elements) == (
+        h.capacity, h.n_hoods, h.n_regions, h.n_elements,
+    ):
+        return h
+
+    def pad1(x, fill, total):
+        return jnp.full((total,), fill, x.dtype).at[: x.shape[0]].set(x)
+
+    valid = pad1(h.valid, False, capacity)
+    vertex = jnp.where(valid, pad1(h.vertex, 0, capacity), n_regions)
+    hood_id = jnp.where(valid, pad1(h.hood_id, 0, capacity), n_hoods)
+    sizes = pad1(h.sizes, 0, n_hoods)
+    offsets = jnp.concatenate(
+        [h.offsets, jnp.full((n_hoods - h.n_hoods,), h.offsets[-1], h.offsets.dtype)]
+    )
+    rep_valid = pad1(h.rep_valid, False, 2 * capacity)
+    rep_old_index = jnp.where(
+        rep_valid, pad1(h.rep_old_index, 0, 2 * capacity), capacity - 1
+    ).astype(jnp.int32)
+    rep_test_label = jnp.where(rep_valid, pad1(h.rep_test_label, 0, 2 * capacity), 0)
+    rep_hood_id = jnp.where(
+        rep_valid, pad1(h.rep_hood_id, 0, 2 * capacity), n_hoods
+    ).astype(jnp.int32)
+
+    return Hoods(
+        vertex=vertex.astype(jnp.int32),
+        hood_id=hood_id.astype(jnp.int32),
+        valid=valid,
+        sizes=sizes,
+        offsets=offsets,
+        n_hoods=n_hoods,
+        n_regions=n_regions,
+        n_elements=n_elements,
+        rep_old_index=rep_old_index,
+        rep_test_label=rep_test_label.astype(jnp.int32),
+        rep_hood_id=rep_hood_id,
+        rep_valid=rep_valid,
     )
 
 

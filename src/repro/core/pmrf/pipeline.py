@@ -2,15 +2,18 @@
 
 ``segment_image`` runs the paper's full flow: oversegmentation -> region
 graph -> maximal cliques -> k=1 neighborhoods -> EM/MAP optimization ->
-pixel label map.  ``segment_volume`` iterates a stack of 2D slices, the
-paper's treatment of 3D volumes (§5).
+pixel label map.  ``segment_volume`` handles a stack of 2D slices, the
+paper's treatment of 3D volumes (§5); by default it pads all slices to a
+shared capacity bucket and runs the whole stack through one vmapped
+``run_em`` trace (DESIGN.md §9), falling back to a per-slice loop for
+heterogeneous stacks.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +21,18 @@ import numpy as np
 
 from repro.core import oversegment
 from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import energy as energy_mod
 from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
 from repro.core.pmrf.energy import EnergyModel, make_energy_model
 from repro.core.pmrf.graph import RegionGraph, build_region_graph
-from repro.core.pmrf.hoods import Hoods, build_hoods
+from repro.core.pmrf.hoods import Hoods, build_hoods, pad_hoods
+
+# All three static dims of the batched bucket are rounded up so stacks with
+# slightly different neighborhood/region counts share one compiled program
+# (every static field feeds the Hoods treedef, so an exact max would
+# recompile on a one-element difference).
+CAPACITY_BUCKET = 256
+SEGMENT_BUCKET = 64  # granularity for n_hoods / n_regions
 
 
 @dataclass
@@ -81,6 +92,12 @@ def initialize(
     )
 
 
+def _initial_params(problem: Problem, seed: int, init: str):
+    if init == "random":
+        return em_mod.init_params(jax.random.PRNGKey(seed), problem.graph.n_regions)
+    return em_mod.quantile_init(problem.graph.region_mean, problem.graph.n_regions)
+
+
 def optimize(
     problem: Problem,
     *,
@@ -89,14 +106,7 @@ def optimize(
     init: str = "random",
 ) -> em_mod.EMResult:
     """Optimization phase (the paper's timed region)."""
-    if init == "random":
-        labels0, mu0, sigma0 = em_mod.init_params(
-            jax.random.PRNGKey(seed), problem.graph.n_regions
-        )
-    else:
-        labels0, mu0, sigma0 = em_mod.quantile_init(
-            problem.graph.region_mean, problem.graph.n_regions
-        )
+    labels0, mu0, sigma0 = _initial_params(problem, seed, init)
     return em_mod.run_em(
         problem.hoods, problem.model, labels0, mu0, sigma0, config
     )
@@ -109,6 +119,7 @@ def segment_image(
     overseg_grid: Tuple[int, int] = (16, 16),
     beta: float = 0.75,
     mode: str = "static",
+    backend: str = "auto",
     init: str = "random",
     max_em_iters: int = 20,
     max_map_iters: int = 10,
@@ -121,12 +132,21 @@ def segment_image(
     )
     t1 = time.perf_counter()
     config = em_mod.EMConfig(
-        max_em_iters=max_em_iters, max_map_iters=max_map_iters, mode=mode, beta=beta
+        max_em_iters=max_em_iters, max_map_iters=max_map_iters, mode=mode,
+        beta=beta, backend=backend,
     )
     result = optimize(problem, seed=seed, config=config, init=init)
     jax.block_until_ready(result.labels)
     t2 = time.perf_counter()
+    return _assemble_result(problem, result, t1 - t0, t2 - t1)
 
+
+def _assemble_result(
+    problem: Problem,
+    result: em_mod.EMResult,
+    init_seconds: float,
+    optimize_seconds: float,
+) -> SegmentationResult:
     region_labels = np.asarray(result.labels)[: problem.graph.n_regions]
     seg = region_labels[problem.labels_px]
     return SegmentationResult(
@@ -137,14 +157,129 @@ def segment_image(
         em_iters=int(result.em_iters),
         map_iters=int(result.map_iters),
         total_energy=float(result.total_energy),
-        init_seconds=t1 - t0,
-        optimize_seconds=t2 - t1,
+        init_seconds=init_seconds,
+        optimize_seconds=optimize_seconds,
     )
 
 
-def segment_volume(images, **kwargs):
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _can_batch(problems: List[Problem]) -> bool:
+    """Batch when padding waste stays bounded: every slice's capacity within
+    2x of the smallest (one bucket), so the shared trace doesn't burn the
+    win on padding FLOPs.  Heterogeneous stacks fall back to the loop."""
+    caps = [p.hoods.capacity for p in problems]
+    return len(problems) > 1 and max(caps) <= 2 * min(caps)
+
+
+def segment_volume(
+    images,
+    *,
+    seed: int = 0,
+    overseg_grid: Tuple[int, int] = (16, 16),
+    beta: float = 0.75,
+    mode: str = "static",
+    backend: str = "auto",
+    init: str = "random",
+    max_em_iters: int = 20,
+    max_map_iters: int = 10,
+    batch: str = "auto",
+) -> Tuple[List[SegmentationResult], float]:
     """Segment a stack of 2D slices; returns (results, mean_optimize_seconds)
-    — the paper reports the per-slice average of the optimization phase."""
-    results = [segment_image(np.asarray(img), **kwargs) for img in images]
+    — the paper reports the per-slice average of the optimization phase.
+
+    ``batch`` is one of ``"auto"`` (batch homogeneous stacks, loop
+    otherwise), ``"always"``, or ``"never"``.  The batched path pads every
+    slice's neighborhoods to a shared capacity bucket and runs the whole
+    stack through one ``run_em_batched`` trace — one compile instead of one
+    per slice — with per-slice results identical to the loop.
+    """
+    if batch not in ("auto", "always", "never"):
+        raise ValueError(f"batch must be auto/always/never, got {batch!r}")
+    images = [np.asarray(img) for img in images]
+    if not images:
+        raise ValueError("segment_volume: empty image stack")
+    config = em_mod.EMConfig(
+        max_em_iters=max_em_iters, max_map_iters=max_map_iters, mode=mode,
+        beta=beta, backend=backend,
+    )
+
+    problems, init_times = [], []
+    for img in images:
+        t0 = time.perf_counter()
+        problems.append(initialize(img, overseg_grid=overseg_grid, beta=beta))
+        init_times.append(time.perf_counter() - t0)
+
+    use_batch = batch == "always" or (batch == "auto" and _can_batch(problems))
+    if not use_batch:
+        results = []
+        for problem, init_s in zip(problems, init_times):
+            t1 = time.perf_counter()
+            res = optimize(problem, seed=seed, config=config, init=init)
+            jax.block_until_ready(res.labels)
+            opt_s = time.perf_counter() - t1
+            results.append(_assemble_result(problem, res, init_s, opt_s))
+        mean_opt = float(np.mean([r.optimize_seconds for r in results]))
+        return results, mean_opt
+
+    results = _optimize_batched(problems, config, seed, init, init_times)
     mean_opt = float(np.mean([r.optimize_seconds for r in results]))
     return results, mean_opt
+
+
+def _optimize_batched(
+    problems: List[Problem],
+    config: em_mod.EMConfig,
+    seed: int,
+    init: str,
+    init_times: List[float],
+) -> List[SegmentationResult]:
+    """Pad all slices to one (capacity, n_hoods, n_regions) bucket, stack,
+    and run a single vmapped EM over the whole stack."""
+    cap = _round_up(max(p.hoods.capacity for p in problems), CAPACITY_BUCKET)
+    n_hoods = _round_up(max(p.hoods.n_hoods for p in problems), SEGMENT_BUCKET)
+    n_regions = _round_up(max(p.hoods.n_regions for p in problems), SEGMENT_BUCKET)
+
+    hoods_list, model_list, l0_list, mu0_list, s0_list = [], [], [], [], []
+    for i, p in enumerate(problems):
+        hoods_list.append(
+            pad_hoods(
+                p.hoods, capacity=cap, n_hoods=n_hoods, n_regions=n_regions,
+                n_elements=-1,  # mixed stack: counts differ per slice
+            )
+        )
+        model_list.append(energy_mod.pad_model(p.model, n_regions))
+        # Initial params come from the slice's own (unpadded) statistics so
+        # the batched trajectory matches the per-slice one exactly.
+        labels0, mu0, sigma0 = _initial_params(p, seed, init)
+        lab = jnp.zeros((n_regions + 1,), jnp.int32)
+        l0_list.append(lab.at[: p.graph.n_regions].set(labels0[: p.graph.n_regions]))
+        mu0_list.append(mu0)
+        s0_list.append(sigma0)
+
+    stack = lambda xs: jax.tree.map(lambda *ls: jnp.stack(ls), *xs)
+    hoods_b, model_b = stack(hoods_list), stack(model_list)
+    l0_b = jnp.stack(l0_list)
+    mu0_b = jnp.stack(mu0_list)
+    s0_b = jnp.stack(s0_list)
+
+    t1 = time.perf_counter()
+    res = em_mod.run_em_batched(hoods_b, model_b, l0_b, mu0_b, s0_b, config)
+    jax.block_until_ready(res.labels)
+    opt_s = (time.perf_counter() - t1) / len(problems)
+
+    out = []
+    for i, p in enumerate(problems):
+        res_i = em_mod.EMResult(
+            labels=res.labels[i],
+            mu=res.mu[i],
+            sigma=res.sigma[i],
+            hood_energy=res.hood_energy[i],
+            total_energy=res.total_energy[i],
+            em_iters=res.em_iters[i],
+            map_iters=res.map_iters[i],
+        )
+        out.append(_assemble_result(p, res_i, init_times[i], opt_s))
+    return out

@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: fully-fused MAP iteration inner step.
+
+The paper's MAP iteration is a chain of DPPs — Map (energy), SortByKey +
+ReduceByKey(Min) (per-element label min), ReduceByKey(Add) (per-hood energy
+sums), Scatter (label votes) — and its own profiling (§4.3.2) pins the
+scaling ceiling on the keyed primitives.  ``mrf_energy.py`` already fuses
+the first two for the binary-label case; this kernel fuses the *entire*
+iteration body into one launch:
+
+    per element e:   e0, e1   (energy of label 0/1 — registers only)
+                     min_e    = min(e0, e1)
+                     arg      = [e1 < e0]
+    per hood h:      hood_e[h]  = sum_{e in h} min_e[e]          (one-hot dot)
+    per vertex v:    votes1[v]  = sum_{e: vertex[e]=v} arg[e]    (one-hot dot)
+
+The two keyed reductions run as masked one-hot contractions on the MXU
+(DESIGN.md §3): each value block builds its (S x B) one-hot tile in VMEM
+from an iota comparison and contracts it with the block's values,
+accumulating over the (sequential) value grid dimension.  The (2, H)
+replicated energy array, the per-iteration sort, and the three separate
+segment-reduce launches of the unfused static mode all disappear — per MAP
+iteration only the label-dependent neighborhood count (one segment-sum)
+remains outside this kernel.
+
+Inputs (all (H,) unless noted):
+  y       region mean intensity (pre-gathered per element)
+  w       region weight, 0 on padding lanes
+  n1_e    label-1 count of the element's neighborhood
+  nall_e  neighborhood size (EM-invariant, hoisted by the caller)
+  xf      element's current label as float
+  valid   1.0 on real hood elements, 0.0 on padding
+  hood_id / vertex  (H,) int32 segment ids for the two reductions
+  mu, sigma  (2,) label parameters; beta  scalar smoothness weight
+
+Outputs: min_e (H,) f32, arg (H,) i32, hood_e (n_hoods,) f32,
+votes1 (n_vertices,) f32.
+
+Padding convention matches ``segment_reduce.py``: ids >= the padded segment
+count never match a one-hot row, so lanes masked out by ``valid`` (which
+zeroes their contributions anyway) and block-padding lanes (ids forced to
+2**30) are both inert.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024     # hood elements per value tile
+SEG_ALIGN = 128  # segment-axis padding (MXU lane width)
+
+
+def _kernel(
+    params_ref,
+    y_ref,
+    w_ref,
+    n1_ref,
+    nall_ref,
+    xf_ref,
+    valid_ref,
+    hood_ref,
+    vert_ref,
+    min_ref,
+    arg_ref,
+    hood_e_ref,
+    votes_ref,
+):
+    i_v = pl.program_id(0)
+
+    mu0 = params_ref[0]
+    mu1 = params_ref[1]
+    sig0 = params_ref[2]
+    sig1 = params_ref[3]
+    beta = params_ref[4]
+
+    y = y_ref[...]
+    w = w_ref[...]
+    n1 = n1_ref[...]
+    nall = nall_ref[...]
+    xf = xf_ref[...]
+    valid = valid_ref[...]
+
+    # Energy expressions mirror energy.label_energies exactly (same op
+    # order) so the per-element argmin is bit-identical to the static mode.
+    denom = jnp.maximum(nall - 1.0, 1.0)
+    d0 = y - mu0
+    e0 = w * (d0 * d0 / (2.0 * sig0 * sig0) + jnp.log(sig0)) + beta * jnp.maximum(
+        n1 - xf, 0.0
+    ) / denom * valid
+    d1 = y - mu1
+    e1 = w * (d1 * d1 / (2.0 * sig1 * sig1) + jnp.log(sig1)) + beta * jnp.maximum(
+        (nall - n1) - (1.0 - xf), 0.0
+    ) / denom * valid
+
+    min_e = jnp.minimum(e0, e1)
+    argf = (e1 < e0).astype(jnp.float32)
+    min_ref[...] = min_e
+    arg_ref[...] = argf.astype(jnp.int32)
+
+    @pl.when(i_v == 0)
+    def _init():
+        hood_e_ref[...] = jnp.zeros_like(hood_e_ref)
+        votes_ref[...] = jnp.zeros_like(votes_ref)
+
+    # Keyed reductions as one-hot contractions (MXU).  The grid's value
+    # dimension is sequential on TPU, so += accumulation is safe.
+    s_rows = hood_e_ref.shape[0]
+    rows_h = jax.lax.broadcasted_iota(jnp.int32, (s_rows, BLOCK), 0)
+    onehot_h = (rows_h == hood_ref[...][None, :]).astype(jnp.float32)
+    hood_e_ref[...] += jnp.dot(
+        onehot_h, min_e * valid, preferred_element_type=jnp.float32
+    )
+
+    v_rows = votes_ref.shape[0]
+    rows_v = jax.lax.broadcasted_iota(jnp.int32, (v_rows, BLOCK), 0)
+    onehot_v = (rows_v == vert_ref[...][None, :]).astype(jnp.float32)
+    votes_ref[...] += jnp.dot(
+        onehot_v, argf * valid, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_hoods", "n_vertices", "interpret")
+)
+def fused_map_step_pallas(
+    y: jax.Array,
+    w: jax.Array,
+    n1_e: jax.Array,
+    nall_e: jax.Array,
+    xf: jax.Array,
+    valid: jax.Array,
+    hood_id: jax.Array,
+    vertex: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    beta,
+    *,
+    n_hoods: int,
+    n_vertices: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused launch for the whole static-mode MAP iteration body."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = y.shape[0]
+    n_pad = -(-n // BLOCK) * BLOCK
+    s_pad = -(-n_hoods // SEG_ALIGN) * SEG_ALIGN
+    r_pad = -(-n_vertices // SEG_ALIGN) * SEG_ALIGN
+
+    def padf(x):
+        return jnp.zeros((n_pad,), jnp.float32).at[:n].set(x.astype(jnp.float32))
+
+    def padi(x):
+        return jnp.full((n_pad,), 2 ** 30, jnp.int32).at[:n].set(
+            x.astype(jnp.int32)
+        )
+
+    params = jnp.stack(
+        [mu[0], mu[1], sigma[0], sigma[1], jnp.asarray(beta, jnp.float32)]
+    ).astype(jnp.float32)
+
+    min_e, arg, hood_e, votes = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((5,), lambda i: (0,)),  # broadcast scalar params
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((s_pad,), lambda i: (0,)),  # accumulated over grid
+            pl.BlockSpec((r_pad,), lambda i: (0,)),  # accumulated over grid
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((r_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        params,
+        padf(y),
+        padf(w),
+        padf(n1_e),
+        padf(nall_e),
+        padf(xf),
+        padf(valid),
+        padi(hood_id),
+        padi(vertex),
+    )
+
+    return min_e[:n], arg[:n], hood_e[:n_hoods], votes[:n_vertices]

@@ -22,6 +22,7 @@ Outputs: min_e (H,) float32, arg (H,) int32.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -68,8 +69,11 @@ def mrf_min_energy_pallas(
     sigma: jax.Array,
     beta,
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
+    # interpret=None auto-detects: compiled on TPU, interpreter elsewhere.
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = y.shape[0]
     n_pad = -(-n // BLOCK) * BLOCK
 

@@ -1,36 +1,149 @@
-"""Jit'd dispatch wrappers for the Pallas kernels.
+"""Kernel-dispatch execution layer (DESIGN.md §3).
 
-Each op chooses between the Pallas kernel (TPU target; interpret mode on
-CPU for validation) and the pure-jnp reference, based on the backend or an
-explicit override.  Library code calls these wrappers, never the kernels
-directly.
+Every accelerated op in the repo resolves through a registry keyed by
+``(op, backend)`` with three built-in backends:
+
+* ``pallas-tpu``       — compiled Pallas kernels (TPU target)
+* ``pallas-interpret`` — the same kernels through the Pallas interpreter
+                         (any backend; slow — for validation and parity
+                         testing, never production CPU use)
+* ``xla``              — pure-jnp reference implementations
+                         (``kernels/ref.py``), XLA's own fusion
+
+Backend resolution order, per call:
+
+1. explicit ``backend=`` argument (``"auto"``/``None`` defer);
+2. the ``REPRO_KERNEL_BACKEND`` environment variable;
+3. a process-wide :func:`set_default_backend` override;
+4. auto-detection: ``pallas-tpu`` iff ``jax.default_backend() == "tpu"``,
+   else ``xla``.
+
+Library code calls the wrappers below, never the kernels directly; new
+lowerings plug in via :func:`register` without touching call sites.  The
+legacy ``use_pallas=`` boolean is still accepted and maps onto the backend
+names (True -> pallas on the current platform, False -> xla).
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import os
+import warnings
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.map_step import BLOCK as MAP_STEP_BLOCK
+from repro.kernels.map_step import SEG_ALIGN, fused_map_step_pallas
 from repro.kernels.mrf_energy import mrf_min_energy_pallas
 from repro.kernels.segment_reduce import segment_reduce_pallas
 
 Array = jax.Array
 
+BACKENDS = ("pallas-tpu", "pallas-interpret", "xla")
 
-def _use_pallas(override: Optional[bool]) -> bool:
-    if override is not None:
-        return override
-    # Pallas compiled path only on TPU; CPU defaults to the reference
-    # (interpret mode is for tests — far too slow for production CPU use).
-    return jax.default_backend() == "tpu"
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+# The fused map-step kernel holds BOTH one-hot tiles (hood and vertex,
+# each (roundup(segments,128) x 1024) f32) in VMEM at once; bound their
+# combined footprint well under the ~16 MB/core so inputs/outputs fit too.
+# Beyond this the dispatch falls back to the reference composition.
+MAX_ONEHOT_BYTES = 8 * 1024 * 1024
+
+# One-hot segment reduction is O(num_segments * num_values) compute vs the
+# O(num_values) XLA scatter; it only wins while the segment axis is small
+# enough to amortize on the MXU.  Auto-routing (dpp.reduce_by_key) keeps
+# reductions with more segments than this on the XLA path.
+MAX_REDUCE_SEGMENTS = 4096
+
+_default_override: Optional[str] = None
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def register(op: str, backend: str) -> Callable[[Callable], Callable]:
+    """Register an implementation for ``(op, backend)`` in the dispatch table."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def registered_ops() -> Tuple[str, ...]:
+    return tuple(sorted({op for op, _ in _REGISTRY}))
+
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Process-wide backend override (below the env var, above auto-detect).
+
+    Pass ``None`` to restore auto-detection.
+    """
+    global _default_override
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    _default_override = backend
+
+
+def _auto_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve ``backend`` (possibly ``None``/``"auto"``) to a concrete name."""
+    if backend in (None, "auto"):
+        backend = os.environ.get(ENV_VAR) or _default_override or _auto_backend()
+    if backend == "pallas":  # platform-appropriate pallas flavour
+        backend = "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    return backend
+
+
+def backend_explicitly_requested(backend: Optional[str]) -> bool:
+    """True when a pallas lowering was *asked for* rather than auto-detected
+    — via argument, env var, or process override.  Downgrade warnings fire
+    only for explicit requests; auto-detected fallbacks are the intended
+    routing and stay silent."""
+    if backend not in (None, "auto"):
+        return True
+    return bool(os.environ.get(ENV_VAR)) or _default_override is not None
+
+
+def _legacy(backend: Optional[str], use_pallas: Optional[bool]) -> Optional[str]:
+    if use_pallas is None:
+        return backend
+    if backend is not None:
+        raise ValueError("pass either backend= or use_pallas=, not both")
+    return "pallas" if use_pallas else "xla"
+
+
+def _dispatch(op: str, backend: str) -> Callable:
+    try:
+        return _REGISTRY[(op, backend)]
+    except KeyError:
+        raise NotImplementedError(f"op {op!r} has no {backend!r} implementation")
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce
+# ---------------------------------------------------------------------------
+
+register("segment_reduce", "xla")(ref.segment_reduce)
+
+
+@register("segment_reduce", "pallas-tpu")
+def _segment_reduce_tpu(values, segment_ids, num_segments, op):
+    return segment_reduce_pallas(values, segment_ids, num_segments, op, interpret=False)
+
+
+@register("segment_reduce", "pallas-interpret")
+def _segment_reduce_interp(values, segment_ids, num_segments, op):
+    return segment_reduce_pallas(values, segment_ids, num_segments, op, interpret=True)
 
 
 def segment_reduce(
@@ -39,13 +152,28 @@ def segment_reduce(
     num_segments: int,
     op: str = "add",
     *,
+    backend: Optional[str] = None,
     use_pallas: Optional[bool] = None,
 ) -> Array:
-    if _use_pallas(use_pallas):
-        return segment_reduce_pallas(
-            values, segment_ids, num_segments, op, interpret=_interpret()
-        )
-    return ref.segment_reduce(values, segment_ids, num_segments, op)
+    backend = resolve_backend(_legacy(backend, use_pallas))
+    return _dispatch("segment_reduce", backend)(values, segment_ids, num_segments, op)
+
+
+# ---------------------------------------------------------------------------
+# mrf_min_energy
+# ---------------------------------------------------------------------------
+
+register("mrf_min_energy", "xla")(ref.mrf_min_energy)
+
+
+@register("mrf_min_energy", "pallas-tpu")
+def _mrf_min_energy_tpu(y, w, n1_e, nall_e, xf, mu, sigma, beta):
+    return mrf_min_energy_pallas(y, w, n1_e, nall_e, xf, mu, sigma, beta, interpret=False)
+
+
+@register("mrf_min_energy", "pallas-interpret")
+def _mrf_min_energy_interp(y, w, n1_e, nall_e, xf, mu, sigma, beta):
+    return mrf_min_energy_pallas(y, w, n1_e, nall_e, xf, mu, sigma, beta, interpret=True)
 
 
 def mrf_min_energy(
@@ -58,13 +186,106 @@ def mrf_min_energy(
     sigma: Array,
     beta,
     *,
+    backend: Optional[str] = None,
     use_pallas: Optional[bool] = None,
 ) -> Tuple[Array, Array]:
-    if _use_pallas(use_pallas):
-        return mrf_min_energy_pallas(
-            y, w, n1_e, nall_e, xf, mu, sigma, beta, interpret=_interpret()
-        )
-    return ref.mrf_min_energy(y, w, n1_e, nall_e, xf, mu, sigma, beta)
+    backend = resolve_backend(_legacy(backend, use_pallas))
+    return _dispatch("mrf_min_energy", backend)(y, w, n1_e, nall_e, xf, mu, sigma, beta)
+
+
+# ---------------------------------------------------------------------------
+# fused_map_step — the whole static-mode MAP iteration body in one launch
+# ---------------------------------------------------------------------------
+
+register("fused_map_step", "xla")(ref.fused_map_step)
+
+
+@register("fused_map_step", "pallas-tpu")
+def _fused_map_step_tpu(y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
+    return fused_map_step_pallas(
+        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        n_hoods=n_hoods, n_vertices=n_vertices, interpret=False,
+    )
+
+
+@register("fused_map_step", "pallas-interpret")
+def _fused_map_step_interp(y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
+    return fused_map_step_pallas(
+        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        n_hoods=n_hoods, n_vertices=n_vertices, interpret=True,
+    )
+
+
+def fused_map_step(
+    y: Array,
+    w: Array,
+    n1_e: Array,
+    nall_e: Array,
+    xf: Array,
+    valid: Array,
+    hood_id: Array,
+    vertex: Array,
+    mu: Array,
+    sigma: Array,
+    beta,
+    *,
+    n_hoods: int,
+    n_vertices: int,
+    backend: Optional[str] = None,
+) -> Tuple[Array, Array, Array, Array]:
+    """Fused MAP step: (min_e, arg, hood_energy_sums, label1_votes)."""
+    requested = backend
+    backend = resolve_backend(backend)
+    if backend != "xla":
+        pad = lambda s: -(-s // SEG_ALIGN) * SEG_ALIGN
+        onehot_bytes = (pad(n_hoods) + pad(n_vertices)) * MAP_STEP_BLOCK * 4
+        if onehot_bytes > MAX_ONEHOT_BYTES:
+            # One-hot tiles would exceed VMEM; the reference composition
+            # still avoids the per-iteration sort and hoisted reductions.
+            # Surface the downgrade (at trace time) when the pallas backend
+            # was explicitly requested, so benchmarks/parity runs don't
+            # silently measure the wrong implementation; auto-detection
+            # falls back quietly (that IS the intended routing).
+            if backend_explicitly_requested(requested):
+                warnings.warn(
+                    f"fused_map_step: one-hot tiles for (n_hoods={n_hoods}, "
+                    f"n_vertices={n_vertices}) need {onehot_bytes/2**20:.1f} "
+                    f"MB VMEM (> {MAX_ONEHOT_BYTES/2**20:.0f} MB); falling "
+                    f"back from {backend!r} to the 'xla' composition",
+                    stacklevel=2,
+                )
+            backend = "xla"
+    return _dispatch("fused_map_step", backend)(
+        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        n_hoods=n_hoods, n_vertices=n_vertices,
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@register("flash_attention", "xla")
+def _flash_attention_xla(q, k, v, *, causal, scale, block_q, block_k):
+    del block_q, block_k
+    return ref.flash_attention(q, k, v, causal=causal, scale=scale)
+
+
+@register("flash_attention", "pallas-tpu")
+def _flash_attention_tpu(q, k, v, *, causal, scale, block_q, block_k):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=False,
+    )
+
+
+@register("flash_attention", "pallas-interpret")
+def _flash_attention_interp(q, k, v, *, causal, scale, block_q, block_k):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=True,
+    )
 
 
 def flash_attention(
@@ -74,13 +295,12 @@ def flash_attention(
     *,
     causal: bool = False,
     scale: Optional[float] = None,
+    backend: Optional[str] = None,
     use_pallas: Optional[bool] = None,
     block_q: int = 128,
     block_k: int = 128,
 ) -> Array:
-    if _use_pallas(use_pallas):
-        return flash_attention_pallas(
-            q, k, v, causal=causal, scale=scale,
-            block_q=block_q, block_k=block_k, interpret=_interpret(),
-        )
-    return ref.flash_attention(q, k, v, causal=causal, scale=scale)
+    backend = resolve_backend(_legacy(backend, use_pallas))
+    return _dispatch("flash_attention", backend)(
+        q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k
+    )

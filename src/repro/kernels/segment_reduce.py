@@ -20,6 +20,7 @@ a one-hot row, so callers pad values with anything and ids with 2**30.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,9 +74,15 @@ def segment_reduce_pallas(
     num_segments: int,
     op: str = "add",
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Segmented reduction via pl.pallas_call.  1D float values only."""
+    """Segmented reduction via pl.pallas_call.  1D float values only.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+    Pass an explicit bool to force either (tests use ``interpret=True``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = values.shape[0]
     n_pad = -(-n // BLOCK_VAL) * BLOCK_VAL
     s_pad = -(-num_segments // BLOCK_SEG) * BLOCK_SEG

@@ -402,16 +402,14 @@ class HloCost:
         cdims = [int(d) for d in m.group(1).split(",") if d]
         # lhs shape = first operand
         local = {i.name: i.result_text for i in comp.instrs}
-        lhs_text = None
-        inline = _shape_list(instr.args_text)
-        if inline:
-            lhs_text = instr.args_text.split(",")[0]
-        elif instr.operands:
+        # Shapes contain commas (f32[32,64]{1,0}), so never comma-split the
+        # args text — take the first parsed shape as the lhs.
+        lhs = _shape_list(instr.args_text)[:1]
+        if not lhs and instr.operands:
             op = instr.operands[0]
             lhs_text = local.get(op) or comp.param_shapes.get(op)
-        if lhs_text is None:
-            return 2.0 * out_elems
-        lhs = _shape_list(lhs_text)
+            if lhs_text is not None:
+                lhs = _shape_list(lhs_text)[:1]
         if not lhs:
             return 2.0 * out_elems
         k = 1

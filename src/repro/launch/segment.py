@@ -27,7 +27,13 @@ def main() -> None:
     ap.add_argument("--slices", type=int, default=2)
     ap.add_argument("--size", type=int, default=96)
     ap.add_argument("--grid", type=int, default=12, help="oversegmentation grid")
-    ap.add_argument("--mode", choices=("static", "faithful"), default="static")
+    ap.add_argument(
+        "--mode", choices=("static", "faithful", "static-pallas"), default="static"
+    )
+    ap.add_argument(
+        "--backend", default="auto",
+        help="kernel dispatch backend: auto|xla|pallas-tpu|pallas-interpret",
+    )
     ap.add_argument("--dataset", choices=("synthetic", "experimental"),
                     default="synthetic")
     ap.add_argument("--init", choices=("random", "quantile"), default="quantile")
@@ -50,6 +56,7 @@ def main() -> None:
             seed=args.seed,
             overseg_grid=(args.grid, args.grid),
             mode=args.mode,
+            backend=args.backend,
             init=args.init,
         )
         gt = np.asarray(vol.ground_truth[i])

@@ -24,6 +24,8 @@ from functools import partial
 from typing import Optional, Tuple
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -85,7 +87,7 @@ def sp_decode_attention(
     cspec = P(bs, None, seq_axis, None)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(qspec, cspec, cspec, qspec, qspec, P()),
         out_specs=(qspec, cspec, cspec),
         check_vma=False,
@@ -145,7 +147,7 @@ def sp_decode_attention_mla(
     kspec = P(bs, None, seq_axis, None)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(qspec, cspec, kspec, P(bs, None, None), qspec, P()),
         out_specs=(qspec, cspec, kspec),
         check_vma=False,

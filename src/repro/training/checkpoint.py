@@ -56,7 +56,8 @@ _BF16_EXT = "bf16.npy"  # stored as uint16 view
 
 
 def _flatten(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
-    leaves, treedef = jax.tree.flatten_with_path(tree)
+    # tree_util spelling: jax.tree.flatten_with_path only exists in newer JAX
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in leaves:
         name = "_".join(_key_str(k) for k in path) or "root"

@@ -14,6 +14,8 @@ assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
 )
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
@@ -28,26 +30,26 @@ def check_sharded_dpps():
     x = jnp.arange(n, dtype=jnp.float32) * 0.5 - 7.0
     seg = jnp.asarray(np.random.RandomState(0).randint(0, 5, size=n), jnp.int32)
 
-    scan_fn = jax.shard_map(
+    scan_fn = shard_map(
         lambda v: dpp_sharded.global_scan(v, "data"),
         mesh=mesh, in_specs=P("data"), out_specs=P("data"),
     )
     np.testing.assert_allclose(np.asarray(scan_fn(x)), np.cumsum(np.asarray(x)), rtol=1e-5)
 
-    scan_ex = jax.shard_map(
+    scan_ex = shard_map(
         lambda v: dpp_sharded.global_scan(v, "data", exclusive=True),
         mesh=mesh, in_specs=P("data"), out_specs=P("data"),
     )
     want = np.cumsum(np.asarray(x)) - np.asarray(x)
     np.testing.assert_allclose(np.asarray(scan_ex(x)), want, rtol=1e-5)
 
-    red = jax.shard_map(
+    red = shard_map(
         lambda v: dpp_sharded.global_reduce(v, "data", "add"),
         mesh=mesh, in_specs=P("data"), out_specs=P(),
     )
     np.testing.assert_allclose(float(red(x)), float(jnp.sum(x)), rtol=1e-5)
 
-    rbk = jax.shard_map(
+    rbk = shard_map(
         lambda s, v: dpp_sharded.global_reduce_by_key(s, v, 5, "data", "add"),
         mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P(),
     )

@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+The seed image hard-imported ``hypothesis``, so a missing dev dependency
+killed *collection* of every test in the importing module (tier-1 failure
+mode).  Importing ``given``/``settings``/``st`` from here instead keeps the
+example-based tests in those modules runnable everywhere: when hypothesis
+is absent, ``@given`` turns the test into a skip and ``st`` degrades to an
+inert strategy-factory stub.
+
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any strategy construction; only valid as a placeholder."""
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return self
+
+            return make
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco

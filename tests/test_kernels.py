@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
