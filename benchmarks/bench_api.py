@@ -1,0 +1,116 @@
+"""Session-API latency: cold compile vs warm cache, batched vs serial.
+
+Exercises the three-phase ``Segmenter`` lifecycle (DESIGN.md §10) on the
+paper's synthetic data and emits ``BENCH_api.json``:
+
+* ``cold_compile_seconds``   — first `compile()` for a fresh bucket (AOT
+  lower + XLA compile; what a cache miss costs).
+* ``warm_execute_seconds``   — `execute()` against the cached executable
+  (what steady-state traffic pays).
+* ``serial_8_seconds`` / ``batched_8_seconds`` — 8 concurrent same-bucket
+  requests run as 8 warm `execute()` calls vs one `submit()`/`drain()`
+  micro-batched launch (both exclude their compile, which is reported
+  separately), plus the implied per-request throughput ratio.
+
+On CPU the batched ratio is typically < 1: a vmapped ``while_loop`` runs
+until the *slowest* element converges and XLA:CPU serializes the batch
+lanes, so coalescing only pays off on accelerators (where it replaces 8
+kernel-launch streams with one) — track the number, don't assert on it.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_csv, time_fn
+from repro import api
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+
+OUT_PATH = pathlib.Path("BENCH_api.json")
+N_CONCURRENT = 8
+
+
+def run() -> dict:
+    vol = synthetic.make_synthetic_volume(
+        seed=0, n_slices=N_CONCURRENT, shape=(96, 96)
+    )
+    imgs = [np.asarray(im) for im in vol.images]
+
+    jax.clear_caches()
+    api.reset_sessions()
+    em_mod.reset_trace_counts()  # report this section's traces, not history
+    cfg = api.ExecutionConfig(overseg_grid=(12, 12), capacity_bucket=4096)
+    sess = api.Segmenter(cfg)
+    plans = [sess.plan(img) for img in imgs]
+    bucket = plans[0].bucket
+    same_bucket = all(p.bucket == bucket for p in plans)
+
+    # Cold compile (the cache-miss cost) ...
+    t0 = time.perf_counter()
+    exe = sess.compile(bucket)
+    cold_s = time.perf_counter() - t0
+    assert exe.compile_seconds <= cold_s
+
+    # ... vs warm execute (steady-state per-request latency).
+    warm_s = time_fn(lambda: sess.execute(plans[0]).segmentation, repeats=3)
+    assert sess.stats.misses == 1, "warm executes must all hit the cache"
+
+    # 8 concurrent same-bucket requests: serial vs micro-batched.
+    serial_s = time_fn(
+        lambda: [sess.execute(p) for p in plans], repeats=3
+    )
+    # Pre-compile the batch executable so the batched timing is also warm.
+    sess.compile(bucket, batch=N_CONCURRENT)
+
+    last_results = []
+
+    def batched():
+        for p in plans:
+            sess.submit(p, bucket=bucket)
+        last_results[:] = sess.drain()
+        return last_results
+
+    batched_s = time_fn(batched, repeats=3)
+    results = last_results
+
+    return {
+        "bucket": list(bucket),
+        "same_bucket": bool(same_bucket),
+        "backend": cfg.resolved_backend(),
+        "jax_backend": jax.default_backend(),
+        "n_concurrent": N_CONCURRENT,
+        "cold_compile_seconds": round(cold_s, 5),
+        "warm_execute_seconds": round(warm_s, 5),
+        "compile_amortization_x": round(cold_s / max(warm_s, 1e-9), 2),
+        "serial_8_seconds": round(serial_s, 5),
+        "batched_8_seconds": round(batched_s, 5),
+        "batched_speedup_x": round(serial_s / max(batched_s, 1e-9), 2),
+        "cache": sess.stats.as_dict(),
+        "trace_counts": dict(em_mod.TRACE_COUNTS),
+        "mean_em_iters": float(np.mean([r.em_iters for r in results])),
+    }
+
+
+def main() -> None:
+    result = run()
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    print_csv(
+        f"session API: cold vs warm, serial vs batched -> {OUT_PATH}",
+        ["cold_compile_s", "warm_execute_s", "serial_8_s", "batched_8_s",
+         "batched_speedup_x"],
+        [(result["cold_compile_seconds"], result["warm_execute_seconds"],
+          result["serial_8_seconds"], result["batched_8_seconds"],
+          result["batched_speedup_x"])],
+    )
+    assert result["same_bucket"], "bench premise: all slices share one bucket"
+    assert result["cache"]["hits"] > 0 and result["cache"]["evictions"] == 0
+
+
+if __name__ == "__main__":
+    main()

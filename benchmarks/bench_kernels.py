@@ -27,7 +27,7 @@ def bench_segment_reduce() -> list:
         seg = jnp.asarray(np.sort(rng.integers(0, k, n)).astype(np.int32))
         vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
         want = ref.segment_reduce(vals, seg, k, "add")
-        got = ops.segment_reduce(vals, seg, k, "add", use_pallas=True)
+        got = ops.segment_reduce(vals, seg, k, "add", backend="pallas")
         ok = bool(np.allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4))
         t_ref = time_fn(
             lambda: ref.segment_reduce(vals, seg, k, "add"), repeats=3
@@ -49,7 +49,7 @@ def bench_mrf_energy() -> list:
         sigma = jnp.asarray([25.0, 30.0], jnp.float32)
         args = (y, w, jnp.asarray(n1), jnp.asarray(n_all), jnp.asarray(xf), mu, sigma, 0.75)
         want_min, want_arg = ref.mrf_min_energy(*args)
-        got_min, got_arg = ops.mrf_min_energy(*args, use_pallas=True)
+        got_min, got_arg = ops.mrf_min_energy(*args, backend="pallas")
         ok = bool(
             np.allclose(np.asarray(got_min), np.asarray(want_min), rtol=1e-4, atol=1e-4)
             and (np.asarray(got_arg) == np.asarray(want_arg)).all()
@@ -67,7 +67,7 @@ def bench_flash() -> list:
         k = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
         v = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
         want = ref.flash_attention(q, k, v, causal=True)
-        got = ops.flash_attention(q, k, v, causal=True, use_pallas=True)
+        got = ops.flash_attention(q, k, v, causal=True, backend="pallas")
         ok = bool(np.allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3))
         t_ref = time_fn(lambda: ref.flash_attention(q, k, v, causal=True), repeats=3)
         # VMEM working set for the (block_q=128, block_k=128) default tiles

@@ -3,8 +3,8 @@
 Runs the three execution modes (faithful / static / static-pallas) on a
 fixed synthetic image built from ``configs/pmrf_paper.py`` and emits
 ``BENCH_pmrf.json`` so the perf trajectory of the MAP hot loop is tracked
-across PRs.  Also reports the batched-vs-loop ``segment_volume`` timing on
-a small stack (the multi-slice compile-once path, DESIGN.md §9).
+across PRs.  Also reports the batched-vs-loop slice-stack timing through
+the session API (``Segmenter.segment_stack``, DESIGN.md §9/§10).
 """
 
 from __future__ import annotations
@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_csv, time_fn
+from repro import api
 from repro.configs.pmrf_paper import CONFIG
 from repro.core import synthetic
 from repro.core.pmrf import em as em_mod
@@ -64,8 +65,9 @@ def run() -> dict:
         }
 
     imgs = [np.asarray(im) for im in vol.images]
-    _, loop_s = pipeline.segment_volume(imgs, overseg_grid=(16, 16), batch="never")
-    _, batch_s = pipeline.segment_volume(imgs, overseg_grid=(16, 16), batch="always")
+    sess = api.Segmenter(api.ExecutionConfig(overseg_grid=(16, 16)))
+    _, loop_s = sess.segment_stack(imgs, batch="never")
+    _, batch_s = sess.segment_stack(imgs, batch="always")
 
     return {
         "config": CONFIG.name,

@@ -8,6 +8,8 @@ One section per paper table/figure + the framework benches:
     faithful_vs_static  beyond-paper sort-hoisting ablation
     pmrf                per-mode EM timing on the paper config; emits
                         BENCH_pmrf.json for cross-PR perf tracking
+    api                 session API: cold-compile vs warm-cache latency and
+                        batched vs serial throughput; emits BENCH_api.json
     kernels             Pallas kernels vs jnp oracles
     roofline            (arch x shape) roofline table from the dry-run
 
@@ -21,7 +23,8 @@ import time
 import traceback
 
 SECTIONS = (
-    "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "kernels", "roofline"
+    "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "api", "kernels",
+    "roofline",
 )
 
 

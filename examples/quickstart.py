@@ -10,8 +10,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import numpy as np
 
+from repro import api
 from repro.core import metrics, synthetic
-from repro.core.pmrf import pipeline
 
 
 def main() -> None:
@@ -20,11 +20,15 @@ def main() -> None:
     image = np.asarray(vol.images[0])
     truth = np.asarray(vol.ground_truth[0])
 
-    # 2. The paper's pipeline: oversegment -> graph -> cliques ->
-    #    neighborhoods -> EM/MAP optimization (all in DPPs).
-    result = pipeline.segment_image(
-        image, overseg_grid=(12, 12), mode="static", init="quantile"
+    # 2. The paper's pipeline through the session API (DESIGN.md §10):
+    #    plan (oversegment -> graph -> cliques -> neighborhoods), compile
+    #    (AOT, cached per bucket), execute (EM/MAP, all in DPPs).
+    seg = api.Segmenter(
+        api.ExecutionConfig(overseg_grid=(12, 12), mode="static", init="quantile")
     )
+    plan = seg.plan(image)
+    seg.compile(plan)        # explicit; execute() would compile on miss
+    result = seg.execute(plan)
 
     # 3. Compare with ground truth + the threshold baseline (Fig. 1d).
     ours = metrics.evaluate(result.segmentation, truth)

@@ -1,0 +1,45 @@
+"""Public session API: plan → compile → execute (DESIGN.md §10).
+
+Quickstart::
+
+    from repro import api
+
+    seg = api.Segmenter(api.ExecutionConfig(mode="static", backend="auto"))
+    plan = seg.plan(image)          # untimed init: graph/cliques/hoods
+    exe = seg.compile(plan)         # AOT compile, cached per bucket
+    result = seg.execute(plan)      # zero traces on a warm cache
+
+    # request micro-batching: same-bucket submits coalesce into one launch
+    for img in images:
+        seg.submit(img)
+    results = seg.drain()
+
+The legacy one-shot functions (``repro.core.pmrf.pipeline.segment_image`` /
+``segment_volume``) are deprecation shims over :func:`session_for`.
+"""
+
+from repro.api.config import ExecutionConfig
+from repro.api.session import (
+    BucketKey,
+    CacheStats,
+    Executable,
+    ExecutableKey,
+    Plan,
+    Segmenter,
+    default_session,
+    reset_sessions,
+    session_for,
+)
+
+__all__ = [
+    "BucketKey",
+    "CacheStats",
+    "Executable",
+    "ExecutableKey",
+    "ExecutionConfig",
+    "Plan",
+    "Segmenter",
+    "default_session",
+    "reset_sessions",
+    "session_for",
+]

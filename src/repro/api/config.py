@@ -1,0 +1,109 @@
+"""Execution policy for the session API (DESIGN.md §10).
+
+``ExecutionConfig`` is the single place every execution knob lives.  Before
+this existed, policy was smeared across ``EMConfig.mode``,
+``EMConfig.backend``, the ``REPRO_KERNEL_BACKEND`` environment variable,
+legacy ``use_pallas=`` kwargs, and per-call keyword arguments on
+``segment_image`` — four half-overlapping surfaces with no defined
+precedence.  The resolution order is now:
+
+1. explicit ``ExecutionConfig`` field (``backend="auto"`` defers);
+2. the ``REPRO_KERNEL_BACKEND`` environment variable;
+3. the process-wide :func:`repro.kernels.ops.set_default_backend` override;
+4. platform auto-detection (``pallas-tpu`` on TPU, else ``xla``).
+
+Steps 2-4 are delegated to :func:`repro.kernels.ops.resolve_backend`, so
+library code and the session API can never disagree.  Resolution happens
+once, at ``Segmenter.compile`` time — the resolved name is baked into the
+executable's cache key, so flipping the env var mid-session affects new
+compilations only, never silently invalidates (or mismatches) cached ones.
+
+The config is frozen and hashable: it doubles as the key for the
+module-level session registry (one default ``Segmenter`` per distinct
+config, see ``session.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Tuple
+
+from repro.core.pmrf import em as em_mod
+from repro.kernels import ops as kops
+
+#: Granularity the padded neighborhood capacity is rounded up to.  Coarse
+#: buckets mean slightly different problems share one compiled executable
+#: (every static dim feeds the Hoods treedef, so an exact max would
+#: recompile on a one-element difference).
+DEFAULT_CAPACITY_BUCKET = 256
+#: Granularity for the n_hoods / n_regions static dims.
+DEFAULT_SEGMENT_BUCKET = 64
+
+
+@dataclass(frozen=True)
+class ExecutionConfig:
+    """Every knob that selects *how* a segmentation problem executes.
+
+    Problem-shaping knobs (oversegmentation grid, energy weights) live here
+    too because they determine the planned problem's static shapes — two
+    sessions with different grids produce different buckets and must not
+    share executables.
+    """
+
+    # --- kernel / schedule selection -----------------------------------
+    backend: str = "auto"   # auto | xla | pallas | pallas-tpu | pallas-interpret
+    mode: str = "static"    # faithful | static | static-pallas
+
+    # --- optimization limits / convergence -----------------------------
+    max_em_iters: int = 20
+    max_map_iters: int = 10
+    beta: float = 0.75
+    sigma_min: float = 2.0
+    init: str = "random"    # random | quantile
+
+    # --- planning (oversegmentation) -----------------------------------
+    overseg_grid: Tuple[int, int] = (16, 16)
+    overseg_iters: int = 5
+
+    # --- bucketing / caching -------------------------------------------
+    capacity_bucket: int = DEFAULT_CAPACITY_BUCKET
+    segment_bucket: int = DEFAULT_SEGMENT_BUCKET
+    max_cached_executables: int = 32
+
+    def __post_init__(self):
+        if self.mode not in em_mod.MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; have {em_mod.MODES}")
+        if self.init not in ("random", "quantile"):
+            raise ValueError(f"init must be 'random' or 'quantile', got {self.init!r}")
+        if self.backend not in (None, "auto", "pallas") and self.backend not in kops.BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; have "
+                f"{('auto', 'pallas') + kops.BACKENDS}"
+            )
+        if self.capacity_bucket < 1 or self.segment_bucket < 1:
+            raise ValueError("bucket granularities must be >= 1")
+        if self.max_cached_executables < 1:
+            raise ValueError("max_cached_executables must be >= 1")
+        # Tuples survive hashing; coerce list input once at construction.
+        object.__setattr__(self, "overseg_grid", tuple(self.overseg_grid))
+
+    def resolved_backend(self) -> str:
+        """Concrete backend name after the full resolution order."""
+        return kops.resolve_backend(self.backend)
+
+    def em_config(self) -> em_mod.EMConfig:
+        """The inner-loop config, with the backend resolved *now* so the
+        resulting trace is pinned to a concrete lowering (cache-key
+        stability — see module docstring)."""
+        return em_mod.EMConfig(
+            max_em_iters=self.max_em_iters,
+            max_map_iters=self.max_map_iters,
+            mode=self.mode,
+            beta=self.beta,
+            sigma_min=self.sigma_min,
+            backend=self.resolved_backend(),
+        )
+
+    def with_(self, **changes) -> "ExecutionConfig":
+        """Functional update (dataclasses.replace with validation)."""
+        return replace(self, **changes)

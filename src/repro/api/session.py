@@ -1,0 +1,484 @@
+"""Plan → compile → execute session API (DESIGN.md §10).
+
+``Segmenter`` is the public entry point for all segmentation traffic.  It
+splits the lifecycle into the three phases serving-scale systems use:
+
+* :meth:`Segmenter.plan` — oversegmentation + region graph + cliques +
+  neighborhoods (the paper's untimed init phase) plus bucket assignment:
+  the problem's data-dependent static shapes are rounded up to a shared
+  ``(capacity, n_hoods, n_regions)`` bucket.
+* :meth:`Segmenter.compile` — ahead-of-time lower + compile of the EM
+  driver for one bucket, cached by ``(capacity, n_hoods, n_regions,
+  backend, mode, em limits, batch)`` so repeat traffic never retraces.
+  Compilation needs only shapes (``jax.ShapeDtypeStruct``), never data.
+* :meth:`Segmenter.execute` — pad a plan into its bucket and run the
+  cached executable; zero traces on a warm cache.
+
+``submit``/``drain`` add request micro-batching on top: concurrent
+same-bucket requests coalesce into one vmapped ``run_em_batched`` launch
+(one compile, one kernel stream for the whole group), generalizing what
+``segment_volume`` used to hardcode for homogeneous slice stacks.
+
+Results are bit-identical across all paths (direct, padded, batched):
+padding lanes contribute exact zeros to every reduction and phantom hoods
+converge trivially (DESIGN.md §9), so the executable cache is a pure
+performance layer, never a semantics layer.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ExecutionConfig
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import energy as energy_mod
+from repro.core.pmrf import pipeline as pipeline_mod
+from repro.core.pmrf.hoods import Hoods, pad_hoods
+
+Array = jax.Array
+
+
+class BucketKey(NamedTuple):
+    """Shared static shapes a plan is padded to (the compile unit)."""
+
+    capacity: int
+    n_hoods: int
+    n_regions: int
+
+
+class ExecutableKey(NamedTuple):
+    """Cache key for a compiled EM program.
+
+    ``backend`` is the *resolved* concrete name (never "auto"), so the key
+    pins the actual lowering.  ``batch`` is ``None`` for the unbatched
+    executable or the group size for a vmapped one — a batch-of-8 program
+    and a single-request program are distinct XLA executables.
+    """
+
+    capacity: int
+    n_hoods: int
+    n_regions: int
+    backend: str
+    mode: str
+    max_em_iters: int
+    max_map_iters: int
+    batch: Optional[int]
+
+
+@dataclass
+class Plan:
+    """A planned (initialized + bucketed) segmentation problem."""
+
+    problem: pipeline_mod.Problem
+    bucket: BucketKey
+    init_seconds: float
+    # Padded-input memo keyed by (bucket, seed, init): repeat executes of
+    # the same plan are pure device replays, not re-pads (see _pad_plan).
+    _padded: dict = field(default_factory=dict, repr=False, compare=False)
+
+    @property
+    def n_regions(self) -> int:
+        return self.problem.graph.n_regions
+
+
+@dataclass
+class Executable:
+    """One AOT-compiled EM program for a bucket (and optional batch size)."""
+
+    key: ExecutableKey
+    compiled: object                 # jax.stages.Compiled
+    em_config: em_mod.EMConfig
+    compile_seconds: float
+    calls: int = 0
+
+    def __call__(self, hoods, model, labels0, mu0, sigma0) -> em_mod.EMResult:
+        self.calls += 1
+        return self.compiled(hoods, model, labels0, mu0, sigma0)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "evictions": self.evictions}
+
+
+class _Pending(NamedTuple):
+    plan: Plan
+    seed: int
+    bucket: BucketKey
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _abstract_inputs(bucket: BucketKey, batch: Optional[int]):
+    """ShapeDtypeStruct pytrees matching a bucket's padded runtime inputs.
+
+    Must mirror exactly what ``_pad_plan`` produces (shapes, dtypes, and
+    the ``Hoods`` static treedef — ``n_elements=-1`` is the shared "mixed"
+    override) or the AOT executable will reject its own inputs.
+    """
+    cap, nh, nr = bucket
+
+    def arr(shape, dtype):
+        if batch is not None:
+            shape = (batch,) + shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    hoods = Hoods(
+        vertex=arr((cap,), jnp.int32),
+        hood_id=arr((cap,), jnp.int32),
+        valid=arr((cap,), jnp.bool_),
+        sizes=arr((nh,), jnp.int32),
+        offsets=arr((nh + 1,), jnp.int32),
+        n_hoods=nh,
+        n_regions=nr,
+        n_elements=-1,
+        rep_old_index=arr((2 * cap,), jnp.int32),
+        rep_test_label=arr((2 * cap,), jnp.int32),
+        rep_hood_id=arr((2 * cap,), jnp.int32),
+        rep_valid=arr((2 * cap,), jnp.bool_),
+    )
+    model = energy_mod.EnergyModel(
+        region_mean=arr((nr + 1,), jnp.float32),
+        region_weight=arr((nr + 1,), jnp.float32),
+        beta=arr((), jnp.float32),
+        sigma_min=arr((), jnp.float32),
+        reseed_mu=arr((2,), jnp.float32),
+        reseed_sigma=arr((), jnp.float32),
+    )
+    labels0 = arr((nr + 1,), jnp.int32)
+    mu0 = arr((2,), jnp.float32)
+    sigma0 = arr((2,), jnp.float32)
+    return hoods, model, labels0, mu0, sigma0
+
+
+class Segmenter:
+    """A segmentation session: one execution policy, one executable cache.
+
+    Thread-unsafe by design (like a jax trace); share across requests, not
+    across threads.  See module docstring for the lifecycle.
+    """
+
+    def __init__(self, config: ExecutionConfig = ExecutionConfig()):
+        self.config = config
+        self._cache: "OrderedDict[ExecutableKey, Executable]" = OrderedDict()
+        self._pending: List[_Pending] = []
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------------
+    # phase 1: plan
+    # ------------------------------------------------------------------
+
+    def bucket_of(self, hoods: Hoods) -> BucketKey:
+        """Round a problem's static dims up to the session's bucket grid."""
+        c = self.config
+        return BucketKey(
+            capacity=_round_up(hoods.capacity, c.capacity_bucket),
+            n_hoods=_round_up(hoods.n_hoods, c.segment_bucket),
+            n_regions=_round_up(hoods.n_regions, c.segment_bucket),
+        )
+
+    def plan(self, image, *, oversegmentation=None) -> Plan:
+        """Initialization phase (paper Alg. 2 lines 1-5) + bucket assignment."""
+        t0 = time.perf_counter()
+        problem = pipeline_mod.initialize(
+            image,
+            overseg_grid=self.config.overseg_grid,
+            overseg_iters=self.config.overseg_iters,
+            beta=self.config.beta,
+            sigma_min=self.config.sigma_min,
+            oversegmentation=oversegmentation,
+        )
+        init_s = time.perf_counter() - t0
+        return Plan(
+            problem=problem, bucket=self.bucket_of(problem.hoods), init_seconds=init_s
+        )
+
+    # ------------------------------------------------------------------
+    # phase 2: compile (cached)
+    # ------------------------------------------------------------------
+
+    def _key_for(self, bucket: BucketKey, batch: Optional[int]) -> ExecutableKey:
+        c = self.config
+        return ExecutableKey(
+            capacity=bucket.capacity,
+            n_hoods=bucket.n_hoods,
+            n_regions=bucket.n_regions,
+            backend=c.resolved_backend(),
+            mode=c.mode,
+            max_em_iters=c.max_em_iters,
+            max_map_iters=c.max_map_iters,
+            batch=batch,
+        )
+
+    def compile(
+        self, target: Union[Plan, BucketKey, Tuple[int, int, int]], *, batch: Optional[int] = None
+    ) -> Executable:
+        """Return the compiled EM program for a bucket, compiling on miss.
+
+        LRU-cached by :class:`ExecutableKey`; a hit performs zero traces
+        (asserted by tests via ``em.TRACE_COUNTS``).  Eviction drops the
+        least-recently-used executable once the cache exceeds
+        ``config.max_cached_executables``.
+        """
+        bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
+        key = self._key_for(bucket, batch)
+        exe = self._cache.get(key)
+        if exe is not None:
+            self._cache.move_to_end(key)
+            self.stats.hits += 1
+            return exe
+
+        self.stats.misses += 1
+        em_config = self.config.em_config()
+        abstract = _abstract_inputs(bucket, batch)
+        fn = em_mod.run_em if batch is None else em_mod.run_em_batched
+        t0 = time.perf_counter()
+        compiled = fn.lower(*abstract, em_config).compile()
+        exe = Executable(
+            key=key,
+            compiled=compiled,
+            em_config=em_config,
+            compile_seconds=time.perf_counter() - t0,
+        )
+        self._cache[key] = exe
+        while len(self._cache) > self.config.max_cached_executables:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+        return exe
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    @property
+    def cache_keys(self) -> Tuple[ExecutableKey, ...]:
+        return tuple(self._cache)
+
+    # ------------------------------------------------------------------
+    # phase 3: execute
+    # ------------------------------------------------------------------
+
+    def _pad_plan(self, plan: Plan, bucket: BucketKey, seed: int):
+        """Pad one plan's runtime inputs into ``bucket`` (memoized on the
+        plan, so warm repeat traffic pays zero host-side padding work).
+
+        Initial parameters come from the plan's own (unpadded) statistics
+        so the padded trajectory matches the natural-shape one exactly.
+        """
+        memo_key = (bucket, seed, self.config.init)
+        cached = plan._padded.get(memo_key)
+        if cached is not None:
+            return cached
+        p = plan.problem
+        cap, nh, nr = bucket
+        hoods = pad_hoods(
+            p.hoods, capacity=cap, n_hoods=nh, n_regions=nr, n_elements=-1
+        )
+        model = energy_mod.pad_model(p.model, nr)
+        labels0, mu0, sigma0 = pipeline_mod._initial_params(p, seed, self.config.init)
+        lab = jnp.zeros((nr + 1,), jnp.int32)
+        lab = lab.at[: p.graph.n_regions].set(labels0[: p.graph.n_regions])
+        plan._padded[memo_key] = (hoods, model, lab, mu0, sigma0)
+        return plan._padded[memo_key]
+
+    def execute(
+        self, plan: Plan, *, seed: int = 0, bucket: Optional[BucketKey] = None
+    ) -> pipeline_mod.SegmentationResult:
+        """Run one plan through its bucket's cached executable."""
+        bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
+        exe = self.compile(bucket)
+        inputs = self._pad_plan(plan, bucket, seed)
+        t0 = time.perf_counter()
+        res = exe(*inputs)
+        jax.block_until_ready(res.labels)
+        opt_s = time.perf_counter() - t0
+        return pipeline_mod._assemble_result(plan.problem, res, plan.init_seconds, opt_s)
+
+    def segment(self, image, *, seed: int = 0, oversegmentation=None):
+        """Convenience: plan + execute in one call."""
+        return self.execute(
+            self.plan(image, oversegmentation=oversegmentation), seed=seed
+        )
+
+    # ------------------------------------------------------------------
+    # micro-batching: submit / drain
+    # ------------------------------------------------------------------
+
+    def submit(
+        self,
+        image_or_plan,
+        *,
+        seed: int = 0,
+        bucket: Optional[BucketKey] = None,
+    ) -> int:
+        """Enqueue a request; returns its ticket (index into ``drain()``).
+
+        ``bucket`` overrides the plan's own bucket — callers coalescing a
+        known-homogeneous group (e.g. a volume's slices) pass the group's
+        joint bucket so every member lands in one launch.
+        """
+        plan = (
+            image_or_plan
+            if isinstance(image_or_plan, Plan)
+            else self.plan(image_or_plan)
+        )
+        bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
+        self._pending.append(_Pending(plan=plan, seed=seed, bucket=bucket))
+        return len(self._pending) - 1
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def drain(self) -> List[pipeline_mod.SegmentationResult]:
+        """Execute all pending requests, coalescing same-bucket groups.
+
+        Each group of n > 1 requests runs as ONE vmapped ``run_em_batched``
+        launch through a batch-n executable (one compile per (bucket, n),
+        reused across drains).  Results come back in submission order and
+        are bit-identical to serial :meth:`execute` calls (§9 padding
+        invariance).
+        """
+        pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        groups: "OrderedDict[BucketKey, List[int]]" = OrderedDict()
+        for i, req in enumerate(pending):
+            groups.setdefault(req.bucket, []).append(i)
+
+        results: List[Optional[pipeline_mod.SegmentationResult]] = [None] * len(pending)
+        try:
+            for bucket, members in groups.items():
+                if len(members) == 1:
+                    i = members[0]
+                    results[i] = self.execute(
+                        pending[i].plan, seed=pending[i].seed, bucket=bucket
+                    )
+                    continue
+                exe = self.compile(bucket, batch=len(members))
+                padded = [
+                    self._pad_plan(pending[i].plan, bucket, pending[i].seed)
+                    for i in members
+                ]
+                stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *padded)
+                t0 = time.perf_counter()
+                res = exe(*stacked)
+                jax.block_until_ready(res.labels)
+                opt_s = (time.perf_counter() - t0) / len(members)
+                for j, i in enumerate(members):
+                    res_i = em_mod.EMResult(*(leaf[j] for leaf in res))
+                    results[i] = pipeline_mod._assemble_result(
+                        pending[i].plan.problem, res_i, pending[i].plan.init_seconds, opt_s
+                    )
+        except Exception:
+            # One group failing (compile OOM, bad bucket override) must not
+            # strand the others: re-queue every request that has no result
+            # yet — in original order, ahead of anything submitted since —
+            # so the caller can fix the cause and drain again.
+            unprocessed = [
+                pending[i] for i in range(len(pending)) if results[i] is None
+            ]
+            self._pending = unprocessed + self._pending
+            raise
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # stack helper (what segment_volume used to hardcode)
+    # ------------------------------------------------------------------
+
+    def segment_stack(
+        self,
+        images: Sequence,
+        *,
+        seed: int = 0,
+        batch: str = "auto",
+    ) -> Tuple[List[pipeline_mod.SegmentationResult], float]:
+        """Segment a slice stack; returns (results, mean optimize seconds).
+
+        ``batch="always"``/``"auto"`` submit every slice under the stack's
+        joint bucket (elementwise max) so the whole volume coalesces into
+        one launch; ``"auto"`` falls back to serial execution when the
+        capacity spread exceeds 2x (padding FLOPs would eat the win) or on
+        CPU — a vmapped ``while_loop`` runs every lane to the slowest
+        slice's convergence and XLA:CPU serializes the lanes, while the
+        serial path is already warm-cache cheap (BENCH_api.json tracks
+        both); ``"never"`` always runs serially.
+        """
+        if batch not in ("auto", "always", "never"):
+            raise ValueError(f"batch must be auto/always/never, got {batch!r}")
+        images = [np.asarray(img) for img in images]
+        if not images:
+            raise ValueError("segment_stack: empty image stack")
+        plans = [self.plan(img) for img in images]
+
+        problems = [p.problem for p in plans]
+        use_batch = batch == "always" or (
+            batch == "auto"
+            and pipeline_mod._can_batch(problems)
+            and jax.default_backend() != "cpu"
+        )
+        if not use_batch:
+            results = [self.execute(p, seed=seed) for p in plans]
+        else:
+            joint = BucketKey(
+                *(max(b[d] for b in (p.bucket for p in plans)) for d in range(3))
+            )
+            for p in plans:
+                self.submit(p, seed=seed, bucket=joint)
+            results = self.drain()
+        mean_opt = float(np.mean([r.optimize_seconds for r in results]))
+        return results, mean_opt
+
+
+# ---------------------------------------------------------------------------
+# module-level session registry (the deprecation shims' backing store)
+# ---------------------------------------------------------------------------
+
+_SESSIONS: "OrderedDict[ExecutionConfig, Segmenter]" = OrderedDict()
+
+# Registry bound: each retained session can hold up to its configured
+# max_cached_executables compiled programs, so an unbounded registry would
+# leak under config sweeps (e.g. a beta scan through the legacy shims).
+# LRU-evicted sessions just recompile on return — semantics unchanged.
+MAX_SESSIONS = 8
+
+
+def session_for(config: Optional[ExecutionConfig] = None) -> Segmenter:
+    """Process-wide session per distinct config (LRU, ``MAX_SESSIONS``).
+
+    One-shot callers (the deprecated ``segment_image`` path) repeatedly
+    hitting the same config share a session — and therefore its executable
+    cache — so even legacy traffic stops retracing.
+    """
+    config = config or ExecutionConfig()
+    sess = _SESSIONS.get(config)
+    if sess is None:
+        sess = _SESSIONS[config] = Segmenter(config)
+    else:
+        _SESSIONS.move_to_end(config)
+    while len(_SESSIONS) > MAX_SESSIONS:
+        _SESSIONS.popitem(last=False)
+    return sess
+
+
+def default_session() -> Segmenter:
+    return session_for(ExecutionConfig())
+
+
+def reset_sessions() -> None:
+    """Drop all module-level sessions (and their executable caches).
+
+    Test hook: trace-count assertions need a cold cache."""
+    _SESSIONS.clear()

@@ -37,10 +37,18 @@ WINDOW = 3  # the paper's L
 
 MODES = ("faithful", "static", "static-pallas")
 
-# Python-side trace counter: incremented each time run_em's body is traced
-# (never inside the compiled program).  Lets tests assert that the batched
-# multi-slice path compiles exactly one program for a whole stack.
-TRACE_COUNTS = {"run_em": 0}
+# Python-side trace counters: incremented each time a driver's body is
+# traced (never inside the compiled program).  Tests assert that the
+# batched multi-slice path compiles exactly one program for a whole stack
+# and that the session API's executable cache (repro.api, DESIGN.md §10)
+# performs zero traces on a warm hit.
+TRACE_COUNTS = {"run_em": 0, "run_em_batched": 0}
+
+
+def reset_trace_counts() -> None:
+    """Zero all trace counters (test hook)."""
+    for k in TRACE_COUNTS:
+        TRACE_COUNTS[k] = 0
 
 
 class EMConfig(NamedTuple):
@@ -248,6 +256,7 @@ def run_em_batched(
     bit-identical to individual runs because padding lanes contribute
     exact zeros to every reduction.
     """
+    TRACE_COUNTS["run_em_batched"] = TRACE_COUNTS.get("run_em_batched", 0) + 1
 
     def one(h, m, l0, u0, s0):
         return run_em(h, m, l0, u0, s0, config)

@@ -1,19 +1,19 @@
-"""End-to-end DPP-PMRF segmentation pipeline (public API).
+"""DPP-PMRF pipeline phases + legacy one-shot entry points.
 
-``segment_image`` runs the paper's full flow: oversegmentation -> region
-graph -> maximal cliques -> k=1 neighborhoods -> EM/MAP optimization ->
-pixel label map.  ``segment_volume`` handles a stack of 2D slices, the
-paper's treatment of 3D volumes (§5); by default it pads all slices to a
-shared capacity bucket and runs the whole stack through one vmapped
-``run_em`` trace (DESIGN.md §9), falling back to a per-slice loop for
-heterogeneous stacks.
+The phase functions (``initialize``, ``optimize``) and result assembly
+live here and are the substrate the session API (``repro.api``, DESIGN.md
+§10) builds on.  The one-shot ``segment_image`` / ``segment_volume``
+functions are **deprecated** shims over a module-level default session:
+they still work (and now share compiled executables across calls), but new
+code should drive ``repro.api.Segmenter`` directly for explicit
+plan → compile → execute control and request batching.
 """
 
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,18 +21,10 @@ import numpy as np
 
 from repro.core import oversegment
 from repro.core.pmrf import em as em_mod
-from repro.core.pmrf import energy as energy_mod
 from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
 from repro.core.pmrf.energy import EnergyModel, make_energy_model
 from repro.core.pmrf.graph import RegionGraph, build_region_graph
-from repro.core.pmrf.hoods import Hoods, build_hoods, pad_hoods
-
-# All three static dims of the batched bucket are rounded up so stacks with
-# slightly different neighborhood/region counts share one compiled program
-# (every static field feeds the Hoods treedef, so an exact max would
-# recompile on a one-element difference).
-CAPACITY_BUCKET = 256
-SEGMENT_BUCKET = 64  # granularity for n_hoods / n_regions
+from repro.core.pmrf.hoods import Hoods, build_hoods
 
 
 @dataclass
@@ -112,6 +104,35 @@ def optimize(
     )
 
 
+def _legacy_session(
+    overseg_grid, beta, mode, backend, init, max_em_iters, max_map_iters
+):
+    """Map the legacy kwarg pile onto an ExecutionConfig-keyed session."""
+    from repro import api  # deferred: api builds on this module
+
+    return api.session_for(
+        api.ExecutionConfig(
+            backend=backend,
+            mode=mode,
+            max_em_iters=max_em_iters,
+            max_map_iters=max_map_iters,
+            beta=beta,
+            init=init,
+            overseg_grid=tuple(overseg_grid),
+        )
+    )
+
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use repro.api.Segmenter (plan/compile/execute"
+        " + submit/drain, DESIGN.md §10). This shim routes through a shared"
+        " default session and will be removed in a future release.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def segment_image(
     image,
     *,
@@ -125,20 +146,13 @@ def segment_image(
     max_map_iters: int = 10,
     oversegmentation=None,
 ) -> SegmentationResult:
-    t0 = time.perf_counter()
-    problem = initialize(
-        image, overseg_grid=overseg_grid, beta=beta,
-        oversegmentation=oversegmentation,
+    """Deprecated one-shot entry point; see ``repro.api.Segmenter``."""
+    _warn_deprecated("segment_image")
+    sess = _legacy_session(
+        overseg_grid, beta, mode, backend, init, max_em_iters, max_map_iters
     )
-    t1 = time.perf_counter()
-    config = em_mod.EMConfig(
-        max_em_iters=max_em_iters, max_map_iters=max_map_iters, mode=mode,
-        beta=beta, backend=backend,
-    )
-    result = optimize(problem, seed=seed, config=config, init=init)
-    jax.block_until_ready(result.labels)
-    t2 = time.perf_counter()
-    return _assemble_result(problem, result, t1 - t0, t2 - t1)
+    plan = sess.plan(image, oversegmentation=oversegmentation)
+    return sess.execute(plan, seed=seed)
 
 
 def _assemble_result(
@@ -162,10 +176,6 @@ def _assemble_result(
     )
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 def _can_batch(problems: List[Problem]) -> bool:
     """Batch when padding waste stays bounded: every slice's capacity within
     2x of the smallest (one bucket), so the shared trace doesn't burn the
@@ -187,99 +197,19 @@ def segment_volume(
     max_map_iters: int = 10,
     batch: str = "auto",
 ) -> Tuple[List[SegmentationResult], float]:
-    """Segment a stack of 2D slices; returns (results, mean_optimize_seconds)
-    — the paper reports the per-slice average of the optimization phase.
+    """Deprecated one-shot stack entry point; see ``Segmenter.segment_stack``.
 
-    ``batch`` is one of ``"auto"`` (batch homogeneous stacks, loop
-    otherwise), ``"always"``, or ``"never"``.  The batched path pads every
-    slice's neighborhoods to a shared capacity bucket and runs the whole
-    stack through one ``run_em_batched`` trace — one compile instead of one
-    per slice — with per-slice results identical to the loop.
+    Returns (results, mean_optimize_seconds) — the paper reports the
+    per-slice average of the optimization phase.  ``batch`` is one of
+    ``"auto"`` (batch homogeneous stacks on accelerators; serial on CPU,
+    where the warm-cache serial path is faster — see
+    ``Segmenter.segment_stack``), ``"always"``, or ``"never"``; the batched
+    path coalesces all slices into one vmapped launch through the
+    session's executable cache, with per-slice results identical to the
+    loop.
     """
-    if batch not in ("auto", "always", "never"):
-        raise ValueError(f"batch must be auto/always/never, got {batch!r}")
-    images = [np.asarray(img) for img in images]
-    if not images:
-        raise ValueError("segment_volume: empty image stack")
-    config = em_mod.EMConfig(
-        max_em_iters=max_em_iters, max_map_iters=max_map_iters, mode=mode,
-        beta=beta, backend=backend,
+    _warn_deprecated("segment_volume")
+    sess = _legacy_session(
+        overseg_grid, beta, mode, backend, init, max_em_iters, max_map_iters
     )
-
-    problems, init_times = [], []
-    for img in images:
-        t0 = time.perf_counter()
-        problems.append(initialize(img, overseg_grid=overseg_grid, beta=beta))
-        init_times.append(time.perf_counter() - t0)
-
-    use_batch = batch == "always" or (batch == "auto" and _can_batch(problems))
-    if not use_batch:
-        results = []
-        for problem, init_s in zip(problems, init_times):
-            t1 = time.perf_counter()
-            res = optimize(problem, seed=seed, config=config, init=init)
-            jax.block_until_ready(res.labels)
-            opt_s = time.perf_counter() - t1
-            results.append(_assemble_result(problem, res, init_s, opt_s))
-        mean_opt = float(np.mean([r.optimize_seconds for r in results]))
-        return results, mean_opt
-
-    results = _optimize_batched(problems, config, seed, init, init_times)
-    mean_opt = float(np.mean([r.optimize_seconds for r in results]))
-    return results, mean_opt
-
-
-def _optimize_batched(
-    problems: List[Problem],
-    config: em_mod.EMConfig,
-    seed: int,
-    init: str,
-    init_times: List[float],
-) -> List[SegmentationResult]:
-    """Pad all slices to one (capacity, n_hoods, n_regions) bucket, stack,
-    and run a single vmapped EM over the whole stack."""
-    cap = _round_up(max(p.hoods.capacity for p in problems), CAPACITY_BUCKET)
-    n_hoods = _round_up(max(p.hoods.n_hoods for p in problems), SEGMENT_BUCKET)
-    n_regions = _round_up(max(p.hoods.n_regions for p in problems), SEGMENT_BUCKET)
-
-    hoods_list, model_list, l0_list, mu0_list, s0_list = [], [], [], [], []
-    for i, p in enumerate(problems):
-        hoods_list.append(
-            pad_hoods(
-                p.hoods, capacity=cap, n_hoods=n_hoods, n_regions=n_regions,
-                n_elements=-1,  # mixed stack: counts differ per slice
-            )
-        )
-        model_list.append(energy_mod.pad_model(p.model, n_regions))
-        # Initial params come from the slice's own (unpadded) statistics so
-        # the batched trajectory matches the per-slice one exactly.
-        labels0, mu0, sigma0 = _initial_params(p, seed, init)
-        lab = jnp.zeros((n_regions + 1,), jnp.int32)
-        l0_list.append(lab.at[: p.graph.n_regions].set(labels0[: p.graph.n_regions]))
-        mu0_list.append(mu0)
-        s0_list.append(sigma0)
-
-    stack = lambda xs: jax.tree.map(lambda *ls: jnp.stack(ls), *xs)
-    hoods_b, model_b = stack(hoods_list), stack(model_list)
-    l0_b = jnp.stack(l0_list)
-    mu0_b = jnp.stack(mu0_list)
-    s0_b = jnp.stack(s0_list)
-
-    t1 = time.perf_counter()
-    res = em_mod.run_em_batched(hoods_b, model_b, l0_b, mu0_b, s0_b, config)
-    jax.block_until_ready(res.labels)
-    opt_s = (time.perf_counter() - t1) / len(problems)
-
-    out = []
-    for i, p in enumerate(problems):
-        res_i = em_mod.EMResult(
-            labels=res.labels[i],
-            mu=res.mu[i],
-            sigma=res.sigma[i],
-            hood_energy=res.hood_energy[i],
-            total_energy=res.total_energy[i],
-            em_iters=res.em_iters[i],
-            map_iters=res.map_iters[i],
-        )
-        out.append(_assemble_result(p, res_i, init_times[i], opt_s))
-    return out
+    return sess.segment_stack(images, seed=seed, batch=batch)

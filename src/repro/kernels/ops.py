@@ -115,10 +115,22 @@ def backend_explicitly_requested(backend: Optional[str]) -> bool:
 
 
 def _legacy(backend: Optional[str], use_pallas: Optional[bool]) -> Optional[str]:
+    """One-release warning shim for the pre-registry ``use_pallas=`` boolean.
+
+    All in-repo call sites now pass ``backend=`` (or route through
+    ``repro.api.ExecutionConfig``); this keeps external callers working for
+    one release while telling them where to go.
+    """
     if use_pallas is None:
         return backend
     if backend is not None:
         raise ValueError("pass either backend= or use_pallas=, not both")
+    warnings.warn(
+        "use_pallas= is deprecated and will be removed; pass backend="
+        "'pallas'/'xla' or set repro.api.ExecutionConfig(backend=...)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
     return "pallas" if use_pallas else "xla"
 
 

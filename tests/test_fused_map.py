@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import dpp, synthetic
 from repro.core.pmrf import EMConfig, initialize, run_em
 from repro.core.pmrf import em as em_mod
@@ -33,7 +34,12 @@ def _problem(seed=3, shape=(48, 48), grid=(6, 6)):
 # ---------------------------------------------------------------------------
 
 
-def test_backend_auto_detection():
+def test_backend_auto_detection(monkeypatch):
+    # Neutralize ambient routing (the CI matrix runs the whole suite under
+    # REPRO_KERNEL_BACKEND=pallas-interpret) — this test is about step 4 of
+    # the resolution order.
+    monkeypatch.delenv(kops.ENV_VAR, raising=False)
+    kops.set_default_backend(None)
     want = "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
     assert kops.resolve_backend(None) == want
     assert kops.resolve_backend("auto") == want
@@ -250,11 +256,13 @@ def test_segment_volume_batched_matches_loop():
 
 
 def test_segment_volume_8_slices_traces_run_em_once():
-    # Fresh jit caches: shape bucketing is good enough that another test's
+    # Fresh jit caches AND fresh api sessions: shape bucketing plus the
+    # session-level executable cache are good enough that another test's
     # compiled run_em can otherwise be reused here (0 traces — which is the
     # feature, but makes the ==1 assertion order-dependent).  Slices have
     # data-dependent hood capacities, so the loop path would retrace.
     jax.clear_caches()
+    api.reset_sessions()
     vol = synthetic.make_synthetic_volume(seed=5, n_slices=8, shape=(44, 44))
     imgs = [np.asarray(im) for im in vol.images]
     before = em_mod.TRACE_COUNTS["run_em"]
