@@ -1,0 +1,113 @@
+"""Sharded-vs-single-device EM timing through the session API.
+
+Measures the same problem at ``shards=1`` and ``shards=8`` for the two
+optimized execution modes (static, static-pallas) and emits
+``BENCH_sharded.json`` for cross-PR perf tracking of the multi-device
+path (DESIGN.md §11).  Also asserts the sharded segmentation is
+bit-identical to the single-device one — the benchmark doubles as a
+cheap end-to-end parity check.
+
+The XLA device count is process-global and fixed at backend init, so the
+measurement runs in a child process launched with
+``--xla_force_host_platform_device_count=8`` (a no-op for real
+accelerator platforms: the flag only affects *host* devices); the parent
+forwards the child's JSON.  On CPU the 8 "devices" share the machine's
+cores, so the sharded timings measure collective/partitioning overhead,
+not speedup — the number to watch off-TPU is the overhead ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+OUT_PATH = pathlib.Path("BENCH_sharded.json")
+MODES = ("static", "static-pallas")
+SHARDS = (1, 8)
+
+
+def _measure() -> dict:
+    import jax
+    import numpy as np
+
+    from benchmarks.common import time_fn
+    from repro import api
+    from repro.core import synthetic
+
+    vol = synthetic.make_synthetic_volume(seed=0, n_slices=1, shape=(96, 96))
+    img = np.asarray(vol.images[0])
+    out = {
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "image_shape": list(img.shape),
+        "modes": {},
+    }
+    for mode in MODES:
+        per = {}
+        segmentations = {}
+        for shards in SHARDS:
+            sess = api.Segmenter(
+                api.ExecutionConfig(overseg_grid=(12, 12), mode=mode, shards=shards)
+            )
+            plan = sess.plan(img)
+            exe = sess.compile(plan)  # pay the compile outside the timer
+            res = sess.execute(plan, seed=0)
+            segmentations[shards] = np.asarray(res.segmentation)
+            t = time_fn(lambda: sess.execute(plan, seed=0), repeats=3)
+            per[str(shards)] = {
+                "optimize_seconds": round(t, 5),
+                "compile_seconds": round(exe.compile_seconds, 3),
+                "em_iters": int(res.em_iters),
+            }
+        match = bool(
+            (segmentations[min(SHARDS)] == segmentations[max(SHARDS)]).all()
+        )
+        per["labels_match"] = match
+        assert match, f"sharded {mode} segmentation diverged from single-device"
+        out["modes"][mode] = per
+    return out
+
+
+def main() -> None:
+    if "--child" in sys.argv:
+        print(json.dumps(_measure()))
+        return
+
+    # jax stays unimported in the parent; repro.xla_env imports nothing heavy
+    from repro.xla_env import force_host_device_count
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = force_host_device_count(max(SHARDS), dict(os.environ))
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sharded", "--child"],
+        capture_output=True, text=True, env=env, cwd=root, timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench child failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    result = json.loads(proc.stdout.splitlines()[-1])
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+
+    from benchmarks.common import print_csv
+
+    rows = []
+    for mode, per in result["modes"].items():
+        for shards in map(str, SHARDS):
+            d = per[shards]
+            rows.append((mode, shards, d["optimize_seconds"],
+                         d["compile_seconds"], per["labels_match"]))
+    print_csv(
+        f"sharded EM: 1 vs {max(SHARDS)} shards "
+        f"({result['jax_backend']}, {result['device_count']} devices) -> {OUT_PATH}",
+        ["mode", "shards", "optimize_s", "compile_s", "labels_match"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    main()

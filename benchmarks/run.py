@@ -10,6 +10,8 @@ One section per paper table/figure + the framework benches:
                         BENCH_pmrf.json for cross-PR perf tracking
     api                 session API: cold-compile vs warm-cache latency and
                         batched vs serial throughput; emits BENCH_api.json
+    sharded             multi-device EM: 1 vs 8 shards, static and
+                        static-pallas; emits BENCH_sharded.json
     kernels             Pallas kernels vs jnp oracles
     roofline            (arch x shape) roofline table from the dry-run
 
@@ -23,8 +25,8 @@ import time
 import traceback
 
 SECTIONS = (
-    "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "api", "kernels",
-    "roofline",
+    "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "api", "sharded",
+    "kernels", "roofline",
 )
 
 

@@ -54,6 +54,18 @@ class ExecutionConfig:
     backend: str = "auto"   # auto | xla | pallas | pallas-tpu | pallas-interpret
     mode: str = "static"    # faithful | static | static-pallas
 
+    # --- sharding (multi-device, DESIGN.md §11) ------------------------
+    # shards > 1 block-partitions hood elements over `mesh_axis` of a
+    # `shards`-device mesh and routes execution through the sharded
+    # driver (`core.pmrf.distributed`).  Participates in backend
+    # resolution indirectly (the same EMConfig is compiled per shard) and
+    # in `ExecutableKey` directly: a sharded compile never aliases an
+    # unsharded one.  Device availability is checked at compile time, not
+    # here — on CPU, force virtual devices with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    shards: int = 1
+    mesh_axis: str = "data"
+
     # --- optimization limits / convergence -----------------------------
     max_em_iters: int = 20
     max_map_iters: int = 10
@@ -84,6 +96,10 @@ class ExecutionConfig:
             raise ValueError("bucket granularities must be >= 1")
         if self.max_cached_executables < 1:
             raise ValueError("max_cached_executables must be >= 1")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if not self.mesh_axis or not isinstance(self.mesh_axis, str):
+            raise ValueError(f"mesh_axis must be a non-empty string, got {self.mesh_axis!r}")
         # Tuples survive hashing; coerce list input once at construction.
         object.__setattr__(self, "overseg_grid", tuple(self.overseg_grid))
 

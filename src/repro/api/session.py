@@ -35,8 +35,10 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.api.config import ExecutionConfig
+from repro.core.pmrf import distributed as distributed_mod
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import energy as energy_mod
 from repro.core.pmrf import pipeline as pipeline_mod
@@ -59,7 +61,10 @@ class ExecutableKey(NamedTuple):
     ``backend`` is the *resolved* concrete name (never "auto"), so the key
     pins the actual lowering.  ``batch`` is ``None`` for the unbatched
     executable or the group size for a vmapped one — a batch-of-8 program
-    and a single-request program are distinct XLA executables.
+    and a single-request program are distinct XLA executables.  ``shards``
+    is the mesh-axis size the program was compiled for (1 = single-device):
+    a sharded compile consumes partitioned inputs and emits an SPMD
+    program, so it must never alias an unsharded one in the LRU cache.
     """
 
     capacity: int
@@ -70,6 +75,7 @@ class ExecutableKey(NamedTuple):
     max_em_iters: int
     max_map_iters: int
     batch: Optional[int]
+    shards: int
 
 
 @dataclass
@@ -123,14 +129,18 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _abstract_inputs(bucket: BucketKey, batch: Optional[int]):
+def _abstract_inputs(bucket: BucketKey, batch: Optional[int], shards: int = 1):
     """ShapeDtypeStruct pytrees matching a bucket's padded runtime inputs.
 
     Must mirror exactly what ``_pad_plan`` produces (shapes, dtypes, and
     the ``Hoods`` static treedef — ``n_elements=-1`` is the shared "mixed"
-    override) or the AOT executable will reject its own inputs.
+    override) or the AOT executable will reject its own inputs.  For a
+    sharded program the element capacity is rounded up so it divides into
+    ``shards`` equal blocks (mirroring ``distributed.partition_hoods``).
     """
     cap, nh, nr = bucket
+    if shards > 1:
+        cap = _round_up(cap, shards)
 
     def arr(shape, dtype):
         if batch is not None:
@@ -222,7 +232,26 @@ class Segmenter:
             max_em_iters=c.max_em_iters,
             max_map_iters=c.max_map_iters,
             batch=batch,
+            shards=c.shards,
         )
+
+    def mesh(self) -> Mesh:
+        """The session's device mesh (``shards`` devices on ``mesh_axis``).
+
+        Raises with an actionable message when the process has fewer
+        devices than the config asks for — on CPU, virtual devices come
+        from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+        """
+        n = self.config.shards
+        devices = jax.devices()
+        if len(devices) < n:
+            raise RuntimeError(
+                f"ExecutionConfig(shards={n}) needs {n} devices but the "
+                f"process has {len(devices)}; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+                "before importing jax"
+            )
+        return Mesh(np.array(devices[:n]), (self.config.mesh_axis,))
 
     def compile(
         self, target: Union[Plan, BucketKey, Tuple[int, int, int]], *, batch: Optional[int] = None
@@ -232,9 +261,18 @@ class Segmenter:
         LRU-cached by :class:`ExecutableKey`; a hit performs zero traces
         (asserted by tests via ``em.TRACE_COUNTS``).  Eviction drops the
         least-recently-used executable once the cache exceeds
-        ``config.max_cached_executables``.
+        ``config.max_cached_executables``.  When the session is sharded
+        (``config.shards > 1``) the compiled program is the SPMD
+        ``run_em_sharded`` driver over the session mesh.
         """
         bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
+        shards = self.config.shards
+        if batch is not None and shards > 1:
+            raise ValueError(
+                "micro-batched executables are not supported with shards > 1 "
+                "(the mesh already parallelizes one request across devices); "
+                "drain() runs sharded requests serially"
+            )
         key = self._key_for(bucket, batch)
         exe = self._cache.get(key)
         if exe is not None:
@@ -244,10 +282,16 @@ class Segmenter:
 
         self.stats.misses += 1
         em_config = self.config.em_config()
-        abstract = _abstract_inputs(bucket, batch)
-        fn = em_mod.run_em if batch is None else em_mod.run_em_batched
+        abstract = _abstract_inputs(bucket, batch, shards)
         t0 = time.perf_counter()
-        compiled = fn.lower(*abstract, em_config).compile()
+        if shards > 1:
+            compiled = distributed_mod.run_em_sharded.lower(
+                *abstract, config=em_config, mesh=self.mesh(),
+                axis=self.config.mesh_axis,
+            ).compile()
+        else:
+            fn = em_mod.run_em if batch is None else em_mod.run_em_batched
+            compiled = fn.lower(*abstract, em_config).compile()
         exe = Executable(
             key=key,
             compiled=compiled,
@@ -277,17 +321,32 @@ class Segmenter:
 
         Initial parameters come from the plan's own (unpadded) statistics
         so the padded trajectory matches the natural-shape one exactly.
+
+        Sharded sessions additionally partition the padded hoods
+        (``distributed.partition_hoods``: capacity rounded to a shard
+        multiple, replication arrays localized per element block) — also
+        memoized, so warm sharded traffic pays zero host-side work.
         """
-        memo_key = (bucket, seed, self.config.init)
+        memo_key = (bucket, seed, self.config.init, self.config.shards)
         cached = plan._padded.get(memo_key)
         if cached is not None:
             return cached
         p = plan.problem
         cap, nh, nr = bucket
-        hoods = pad_hoods(
-            p.hoods, capacity=cap, n_hoods=nh, n_regions=nr, n_elements=-1
-        )
-        model = energy_mod.pad_model(p.model, nr)
+        # The padded (+partitioned) hoods/model depend only on the bucket
+        # and shard count — memoized separately so multi-seed traffic pays
+        # the host-side padding/partitioning work once per bucket.
+        hoods_key = ("hoods", bucket, self.config.shards)
+        padded = plan._padded.get(hoods_key)
+        if padded is None:
+            hoods = pad_hoods(
+                p.hoods, capacity=cap, n_hoods=nh, n_regions=nr, n_elements=-1
+            )
+            if self.config.shards > 1:
+                hoods = distributed_mod.partition_hoods(hoods, self.config.shards)
+            model = energy_mod.pad_model(p.model, nr)
+            padded = plan._padded[hoods_key] = (hoods, model)
+        hoods, model = padded
         labels0, mu0, sigma0 = pipeline_mod._initial_params(p, seed, self.config.init)
         lab = jnp.zeros((nr + 1,), jnp.int32)
         lab = lab.at[: p.graph.n_regions].set(labels0[: p.graph.n_regions])
@@ -350,6 +409,11 @@ class Segmenter:
         reused across drains).  Results come back in submission order and
         are bit-identical to serial :meth:`execute` calls (§9 padding
         invariance).
+
+        Sharded sessions (``config.shards > 1``) run every request through
+        the sharded executable *serially*: one request already occupies the
+        whole mesh, so cross-request vmap batching would multiply, not
+        hide, the device footprint.
         """
         pending, self._pending = self._pending, []
         if not pending:
@@ -361,11 +425,11 @@ class Segmenter:
         results: List[Optional[pipeline_mod.SegmentationResult]] = [None] * len(pending)
         try:
             for bucket, members in groups.items():
-                if len(members) == 1:
-                    i = members[0]
-                    results[i] = self.execute(
-                        pending[i].plan, seed=pending[i].seed, bucket=bucket
-                    )
+                if len(members) == 1 or self.config.shards > 1:
+                    for i in members:
+                        results[i] = self.execute(
+                            pending[i].plan, seed=pending[i].seed, bucket=bucket
+                        )
                     continue
                 exe = self.compile(bucket, batch=len(members))
                 padded = [
@@ -418,6 +482,15 @@ class Segmenter:
         """
         if batch not in ("auto", "always", "never"):
             raise ValueError(f"batch must be auto/always/never, got {batch!r}")
+        if batch == "always" and self.config.shards > 1:
+            # Same contract as compile(batch=...): an explicit batching
+            # request is incompatible with a sharded session, loudly.
+            # (batch="auto" degrades to serial execution silently — the
+            # mesh already parallelizes each request.)
+            raise ValueError(
+                "batch='always' is not supported with shards > 1; use "
+                "batch='auto' (sharded requests run serially through the mesh)"
+            )
         images = [np.asarray(img) for img in images]
         if not images:
             raise ValueError("segment_stack: empty image stack")
@@ -426,6 +499,7 @@ class Segmenter:
         problems = [p.problem for p in plans]
         use_batch = batch == "always" or (
             batch == "auto"
+            and self.config.shards == 1
             and pipeline_mod._can_batch(problems)
             and jax.default_backend() != "cpu"
         )

@@ -29,20 +29,36 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import dpp
+
 Array = jax.Array
 
 
 def global_scan(values: Array, axis_name: str, *, exclusive: bool = False) -> Array:
-    """Prefix-sum across the concatenation of all shards (leading axis)."""
+    """Prefix-sum across the concatenation of all shards (leading axis).
+
+    The result dtype is ``jnp.cumsum``'s promoted dtype (e.g. int32 for
+    int16/bool inputs), on every path: a zero-length shard's total is
+    built in ``local_inc.dtype``, not ``values.dtype``, so the shard-total
+    exchange and the carry arithmetic see one dtype regardless of shard
+    occupancy (and of whether the caller is under ``shard_map`` or
+    ``vmap``-with-axis-name).
+    """
     local_inc = jnp.cumsum(values, axis=0)
-    local_total = local_inc[-1] if values.shape[0] > 0 else jnp.zeros(values.shape[1:], values.dtype)
+    if values.shape[0] > 0:
+        local_total = local_inc[-1]
+    else:
+        # dtype-exact empty total: cumsum promotes (int16/bool -> int32);
+        # zeros(values.dtype) here would exchange a narrower dtype than the
+        # non-empty path and re-promote downstream.
+        local_total = jnp.zeros(values.shape[1:], local_inc.dtype)
     # Exclusive prefix of shard totals: gather all totals, sum those before us.
     totals = jax.lax.all_gather(local_total, axis_name)  # (nshards, ...)
     idx = jax.lax.axis_index(axis_name)
     nshards = totals.shape[0]
     mask_shape = (nshards,) + (1,) * (totals.ndim - 1)
-    mask = (jnp.arange(nshards) < idx).reshape(mask_shape).astype(values.dtype)
-    carry = jnp.sum(totals * mask, axis=0)
+    mask = (jnp.arange(nshards) < idx).reshape(mask_shape).astype(totals.dtype)
+    carry = jnp.sum(totals * mask, axis=0, dtype=totals.dtype)
     out = local_inc + carry
     if exclusive:
         out = out - values
@@ -66,21 +82,28 @@ def global_reduce_by_key(
     num_segments: int,
     axis_name: str,
     op: str = "add",
+    *,
+    backend: Optional[str] = None,
 ) -> Array:
     """Segmented reduction over a *global* segment id space.
 
     Every shard returns the full ``(num_segments, ...)`` result (replicated),
     which is the right layout for the PMRF convergence bookkeeping where the
     per-neighborhood sums feed a global decision.
+
+    The local reduction routes through ``dpp.reduce_by_key`` so the kernel
+    dispatch layer (DESIGN.md §3) applies per shard — only the psum/pmin
+    crosses devices, which is what lets the fused static-pallas MAP step
+    run under ``shard_map`` with collectives outside the kernel.
     """
+    local = dpp.reduce_by_key(
+        segment_ids, values, num_segments, op=op, backend=backend
+    )
     if op == "add":
-        local = jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
         return jax.lax.psum(local, axis_name)
     if op == "min":
-        local = jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
         return jax.lax.pmin(local, axis_name)
     if op == "max":
-        local = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
         return jax.lax.pmax(local, axis_name)
     raise ValueError(f"unknown op {op}")
 

@@ -1,6 +1,7 @@
 """DPP-PMRF: the paper's probabilistic-graphical-model optimizer."""
 
 from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
+from repro.core.pmrf.collectives import LOCAL, ReduceCtx
 from repro.core.pmrf.em import EMConfig, EMResult, run_em, run_em_batched
 from repro.core.pmrf.energy import EnergyModel, make_energy_model, pad_model
 from repro.core.pmrf.graph import RegionGraph, build_region_graph
@@ -17,6 +18,8 @@ from repro.core.pmrf.pipeline import (
 __all__ = [
     "CliqueSet",
     "enumerate_maximal_cliques",
+    "LOCAL",
+    "ReduceCtx",
     "EMConfig",
     "EMResult",
     "run_em",

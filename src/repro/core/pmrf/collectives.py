@@ -1,0 +1,99 @@
+"""Collective context: sharded execution as a *parametrization* of EM.
+
+The EM/MAP driver (``em.py``) touches cross-element state in exactly four
+places; everything else in an iteration is elementwise over hood elements
+or operates on tiny replicated arrays (labels, mu/sigma).  The four touch
+points, and what they become when hood elements are block-partitioned over
+a mesh axis (the hybrid distributed PMRF of the paper's §5 / [15]):
+
+  1. per-hood label counts (smoothness context)   Scatter/ReduceByKey -> +psum
+  2. per-hood energy sums (convergence input)     ReduceByKey(Add)    -> +psum
+  3. label votes (scatter into the global field)  Scatter(Add)        -> +psum
+  4. convergence decision                          AND                 -> pmin
+
+:class:`ReduceCtx` carries those four hooks.  The single-device context
+(``axis=None``, the module constant :data:`LOCAL`) lowers each to the plain
+DPP primitive; the sharded context (``axis="<mesh axis>"``) wraps the local
+primitive in the matching ``dpp_sharded`` collective.  The driver is
+written once against the context, so ``distributed.py`` no longer forks
+the MAP/EM loop bodies — it just builds a sharded context and ``shard_map``s
+the same driver (DESIGN.md §11).
+
+The context is a frozen, hashable dataclass: it rides through ``jax.jit``
+static arguments, and two traces with different contexts never alias.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpp, dpp_sharded
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ReduceCtx:
+    """The EM driver's cross-shard reduction hooks (see module docstring).
+
+    ``axis`` is ``None`` for single-device execution or the mesh axis name
+    when running inside a ``shard_map`` region over that axis.
+    """
+
+    axis: Optional[str] = None
+
+    @property
+    def sharded(self) -> bool:
+        return self.axis is not None
+
+    def psum(self, x: Array) -> Array:
+        """Sum a replicated-shape partial result across shards (identity
+        when single-device).  Used where a kernel already produced the
+        local keyed reduction (the fused static-pallas path: collectives
+        stay outside the kernel)."""
+        if self.axis is None:
+            return x
+        return jax.lax.psum(x, self.axis)
+
+    def segment_sum(
+        self,
+        segment_ids: Array,
+        values: Array,
+        num_segments: int,
+        *,
+        backend: Optional[str] = None,
+    ) -> Array:
+        """Touch points 1 & 2: ReduceByKey(Add) over a *global* segment id
+        space.  Local backend-dispatched reduction, psum'd when sharded."""
+        if self.axis is None:
+            return dpp.reduce_by_key(
+                segment_ids, values, num_segments, op="add", backend=backend
+            )
+        return dpp_sharded.global_reduce_by_key(
+            segment_ids, values, num_segments, self.axis, op="add", backend=backend
+        )
+
+    def vote_scatter(self, values: Array, indices: Array, out_size: int) -> Array:
+        """Touch point 3: Scatter(Add) into the global vertex vote field."""
+        local = dpp.scatter_(values, indices, out_size, mode="add")
+        return self.psum(local)
+
+    def all_converged(self, flags: Array) -> Array:
+        """Touch point 4: the global convergence AND.  Flags are computed
+        from psum'd (replicated) energy sums so shards agree by
+        construction; the pmin makes the decision robust to any future
+        shard-local convergence input."""
+        if self.axis is None:
+            return jnp.all(flags)
+        return dpp_sharded.global_all_converged(flags, self.axis)
+
+
+#: The single-device context — the default for ``run_em``.
+LOCAL = ReduceCtx(axis=None)
+
+
+__all__ = ["ReduceCtx", "LOCAL"]

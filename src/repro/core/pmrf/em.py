@@ -13,6 +13,15 @@ Everything here is jittable with static shapes; the execution ``mode``
 primitive sequence (see ``energy.py``), and ``backend`` selects the kernel
 lowering through the dispatch layer (``kernels/ops.py``, DESIGN.md §3).
 
+There is exactly ONE driver (:func:`_em_driver`), parametrized by a
+collective context (``collectives.ReduceCtx``, DESIGN.md §11): the four
+cross-element touch points — per-hood label counts, per-hood energy sums,
+the label-vote scatter, and the convergence AND — go through the context's
+hooks.  :func:`run_em` binds the single-device context;
+``distributed.run_em_sharded`` builds a sharded context and ``shard_map``s
+the same driver, so multi-device execution is a parametrization, not a
+fork.
+
 ``run_em_batched`` vmaps the whole driver over a stack of problems padded
 to shared static shapes (DESIGN.md §9) — one trace, one XLA program for an
 entire volume.
@@ -26,6 +35,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.pmrf import collectives
 from repro.core.pmrf import energy as E
 from repro.core.pmrf.hoods import Hoods
 from repro.kernels import ops as kops
@@ -41,8 +51,9 @@ MODES = ("faithful", "static", "static-pallas")
 # traced (never inside the compiled program).  Tests assert that the
 # batched multi-slice path compiles exactly one program for a whole stack
 # and that the session API's executable cache (repro.api, DESIGN.md §10)
-# performs zero traces on a warm hit.
-TRACE_COUNTS = {"run_em": 0, "run_em_batched": 0}
+# performs zero traces on a warm hit.  ``run_em_sharded`` counts traces of
+# the shard_map'd driver (``distributed.py``).
+TRACE_COUNTS = {"run_em": 0, "run_em_batched": 0, "run_em_sharded": 0}
 
 
 def reset_trace_counts() -> None:
@@ -75,6 +86,7 @@ class _MapCarry(NamedTuple):
     hist: Array          # (WINDOW+1, n_hoods) ring of hood energy sums
     hood_energy: Array
     i: Array
+    done: Array          # replicated convergence flag (ctx.all_converged)
 
 
 class _EmCarry(NamedTuple):
@@ -114,29 +126,39 @@ def _map_step(
     model: E.EnergyModel,
     mode: str,
     backend: str,
-    ctx: Optional[E.StaticMapContext],
+    sctx: Optional[E.StaticMapContext],
+    ctx: collectives.ReduceCtx,
     mu,
     sigma,
     carry: _MapCarry,
 ) -> _MapCarry:
     if mode == "static-pallas":
         labels, hood_e = E.map_step_fused(
-            hoods, model, ctx, carry.labels, mu, sigma, backend=backend
+            hoods, model, sctx, carry.labels, mu, sigma, backend=backend, ctx=ctx
         )
     else:
         # backend selects the keyed-reduction lowering here too; the vote
-        # scatter stays on XLA (scatter_ has no pallas lowering).
+        # scatter stays on XLA (scatter_ has no pallas lowering).  The
+        # neighborhood counts go through the collective context so sharded
+        # runs see cross-shard context; per-element mins stay shard-local
+        # (elements never straddle shards — only hoods do, via the counts).
+        counts = E.hood_label_counts(hoods, carry.labels, backend=backend, ctx=ctx)
         energies = E.label_energies(
-            hoods, model, carry.labels, mu, sigma, backend=backend
+            hoods, model, carry.labels, mu, sigma, hood_counts=counts,
+            backend=backend,
         )
         if mode == "faithful":
             min_e, arg = E.min_energies_faithful(hoods, energies, backend=backend)
         else:
             min_e, arg = E.min_energies_static(energies)
-        hood_e = E.hood_energy_sums(hoods, min_e, backend=backend)
-        labels = E.vote_labels(hoods, arg, hoods.n_regions)
+        hood_e = E.hood_energy_sums(hoods, min_e, backend=backend, ctx=ctx)
+        labels = E.vote_labels(hoods, arg, hoods.n_regions, ctx=ctx)
     hist = jnp.roll(carry.hist, shift=1, axis=0).at[0].set(hood_e)
-    return _MapCarry(labels=labels, hist=hist, hood_energy=hood_e, i=carry.i + 1)
+    i = carry.i + 1
+    # Convergence is decided in the body (not the loop cond) so the
+    # collective AND runs in replicated context on every backend.
+    done = ctx.all_converged(_window_converged(hist, i))
+    return _MapCarry(labels=labels, hist=hist, hood_energy=hood_e, i=i, done=done)
 
 
 def _window_converged(hist: Array, i: Array) -> Array:
@@ -148,18 +170,25 @@ def _window_converged(hist: Array, i: Array) -> Array:
     return jnp.where(i > WINDOW, conv, False)
 
 
-@partial(jax.jit, static_argnames=("config",))
-def run_em(
+def _em_driver(
     hoods: Hoods,
     model: E.EnergyModel,
     labels0: Array,
     mu0: Array,
     sigma0: Array,
-    config: EMConfig = EMConfig(),
+    config: EMConfig,
+    ctx: collectives.ReduceCtx,
 ) -> EMResult:
-    if config.mode not in MODES:
-        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
-    TRACE_COUNTS["run_em"] = TRACE_COUNTS.get("run_em", 0) + 1
+    """THE EM driver — single-device and sharded execution both trace this
+    exact function; only the collective context differs (module docstring).
+
+    When ``ctx`` is sharded, ``hoods`` is the shard-local element block
+    (with globally-indexed ``vertex``/``hood_id`` and shard-localized
+    replication arrays — ``distributed.partition_hoods``), while
+    ``model``/``labels0``/``mu0``/``sigma0`` are replicated.  All label and
+    parameter state stays replicated across shards, so every shard takes
+    the identical EM trajectory.
+    """
     n_hoods = hoods.n_hoods
     mode = config.mode
     # Threaded raw so the dispatch layer can distinguish an explicit
@@ -168,8 +197,8 @@ def run_em(
     # and changing those after a trace is cached will not retrace.
     kops.resolve_backend(config.backend)  # validate early: raises on unknown
     backend = config.backend
-    ctx = (
-        E.make_static_context(hoods, model, backend=backend)
+    sctx = (
+        E.make_static_context(hoods, model, backend=backend, ctx=ctx)
         if mode == "static-pallas"
         else None
     )
@@ -180,15 +209,15 @@ def run_em(
             hist=jnp.zeros((WINDOW + 1, n_hoods), jnp.float32),
             hood_energy=jnp.zeros((n_hoods,), jnp.float32),
             i=jnp.int32(0),
+            done=jnp.bool_(False),
         )
 
         def cond(c: _MapCarry):
-            all_conv = jnp.all(_window_converged(c.hist, c.i))
-            return (c.i < config.max_map_iters) & ~all_conv
+            return (c.i < config.max_map_iters) & ~c.done
 
         return jax.lax.while_loop(
             cond,
-            lambda c: _map_step(hoods, model, mode, backend, ctx, mu, sigma, c),
+            lambda c: _map_step(hoods, model, mode, backend, sctx, ctx, mu, sigma, c),
             init,
         )
 
@@ -198,7 +227,7 @@ def run_em(
         total = jnp.sum(mc.hood_energy)
         hist = jnp.roll(c.total_hist, 1).at[0].set(total)
         em_i = c.em_i + 1
-        done = _window_converged(hist[:, None], em_i)[0]
+        done = ctx.all_converged(_window_converged(hist[:, None], em_i)[0])
         return _EmCarry(
             labels=mc.labels,
             mu=mu,
@@ -236,6 +265,21 @@ def run_em(
         em_iters=final.em_i,
         map_iters=final.map_total,
     )
+
+
+@partial(jax.jit, static_argnames=("config",))
+def run_em(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    labels0: Array,
+    mu0: Array,
+    sigma0: Array,
+    config: EMConfig = EMConfig(),
+) -> EMResult:
+    if config.mode not in MODES:
+        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    TRACE_COUNTS["run_em"] = TRACE_COUNTS.get("run_em", 0) + 1
+    return _em_driver(hoods, model, labels0, mu0, sigma0, config, collectives.LOCAL)
 
 
 @partial(jax.jit, static_argnames=("config",))

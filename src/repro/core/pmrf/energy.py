@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dpp
+from repro.core.pmrf.collectives import LOCAL, ReduceCtx
 from repro.core.pmrf.hoods import Hoods
 from repro.kernels import ops as kops
 
@@ -95,8 +96,9 @@ def label_energies(
     The Map DPP of the paper's "Compute Energy Function" step.
 
     ``hood_counts`` optionally supplies the per-hood (label-1 count, size)
-    arrays — the distributed engine passes globally psum-reduced counts
-    here so shards see cross-shard neighborhood context.
+    arrays — the unified driver passes counts computed through its
+    collective context (:func:`hood_label_counts`) so sharded runs see
+    globally psum-reduced neighborhood context.
 
     ``backend`` selects the keyed-reduction lowering (DESIGN.md §3).
     """
@@ -141,6 +143,31 @@ def label_energies(
     e0 = data_term(0) + smooth_term(0)
     e1 = data_term(1) + smooth_term(1)
     return jnp.stack([e0, e1])
+
+
+def hood_label_counts(
+    hoods: Hoods,
+    labels: Array,
+    *,
+    backend: Optional[str] = None,
+    ctx: ReduceCtx = LOCAL,
+) -> Tuple[Array, Array]:
+    """Per-hood (label-1 count, size) — collective touch point 1.
+
+    Matches the expressions :func:`label_energies` uses when computing the
+    counts itself (single-device bit-identity); the sharded context psums
+    the local segment sums so shards see cross-shard neighborhood context.
+    Counts are integer-valued floats, so the psum of per-shard partials is
+    *exact* — energies, argmins, and therefore labels are bitwise equal to
+    the single-device run.
+    """
+    x = labels[hoods.vertex]
+    ones = hoods.valid.astype(jnp.float32)
+    n1 = ctx.segment_sum(
+        hoods.hood_id, ones * x, hoods.n_hoods + 1, backend=backend
+    )
+    nall = ctx.segment_sum(hoods.hood_id, ones, hoods.n_hoods + 1, backend=backend)
+    return n1, nall
 
 
 def pad_model(model: EnergyModel, n_regions: int) -> EnergyModel:
@@ -201,31 +228,40 @@ def min_energies_faithful(
 
 
 def hood_energy_sums(
-    hoods: Hoods, min_e: Array, *, backend: Optional[str] = None
+    hoods: Hoods,
+    min_e: Array,
+    *,
+    backend: Optional[str] = None,
+    ctx: ReduceCtx = LOCAL,
 ) -> Array:
-    """ReduceByKey(Add) of per-element min energies -> per-hood sums."""
-    return dpp.reduce_by_key(
+    """ReduceByKey(Add) of per-element min energies -> per-hood sums
+    (collective touch point 2: psum'd across shards)."""
+    return ctx.segment_sum(
         hoods.hood_id, jnp.where(hoods.valid, min_e, 0.0), hoods.n_hoods + 1,
-        op="add", backend=backend,
+        backend=backend,
     )[: hoods.n_hoods]
 
 
-def vote_labels(hoods: Hoods, arg: Array, n_regions: int) -> Array:
+def vote_labels(
+    hoods: Hoods, arg: Array, n_regions: int, *, ctx: ReduceCtx = LOCAL
+) -> Array:
     """Update Output Labels (paper step 3's Scatter).
 
     Deterministic adaptation: a vertex can belong to several neighborhoods
     whose scatters race in the paper (it notes the resulting label noise in
-    §4.2.2); we resolve by majority vote via Scatter(add) of one-hot votes.
+    §4.2.2); we resolve by majority vote via Scatter(add) of one-hot votes
+    (collective touch point 3: the vote field is psum'd across shards —
+    votes are integer-valued, so the cross-shard sum is exact and sharded
+    label updates are bitwise identical to single-device).
     Returns (V+1,) labels with the sentinel lane forced to 0.
     """
-    votes1 = dpp.scatter_(
+    votes1 = ctx.vote_scatter(
         jnp.where(hoods.valid, arg, 0).astype(jnp.float32),
         hoods.vertex,
         n_regions + 1,
-        mode="add",
     )
-    votes_all = dpp.scatter_(
-        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1, mode="add"
+    votes_all = ctx.vote_scatter(
+        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1
     )
     new = (votes1 * 2.0 > votes_all).astype(jnp.int32)
     return new.at[n_regions].set(0)
@@ -252,14 +288,16 @@ class StaticMapContext(NamedTuple):
 
 
 def make_static_context(
-    hoods: Hoods, model: EnergyModel, *, backend: Optional[str] = None
+    hoods: Hoods,
+    model: EnergyModel,
+    *,
+    backend: Optional[str] = None,
+    ctx: ReduceCtx = LOCAL,
 ) -> StaticMapContext:
     v = hoods.vertex
     validf = hoods.valid.astype(jnp.float32)
-    nall = dpp.reduce_by_key(
-        hoods.hood_id, validf, hoods.n_hoods + 1, op="add", backend=backend
-    )
-    votes_all = dpp.scatter_(validf, v, hoods.n_regions + 1, mode="add")
+    nall = ctx.segment_sum(hoods.hood_id, validf, hoods.n_hoods + 1, backend=backend)
+    votes_all = ctx.vote_scatter(validf, v, hoods.n_regions + 1)
     return StaticMapContext(
         y=model.region_mean[v],
         w=model.region_weight[v] * validf,
@@ -272,12 +310,13 @@ def make_static_context(
 def map_step_fused(
     hoods: Hoods,
     model: EnergyModel,
-    ctx: StaticMapContext,
+    sctx: StaticMapContext,
     labels: Array,
     mu: Array,
     sigma: Array,
     *,
     backend: Optional[str] = None,
+    ctx: ReduceCtx = LOCAL,
 ) -> Tuple[Array, Array]:
     """One MAP iteration in static-pallas mode -> (new labels, hood sums).
 
@@ -285,20 +324,24 @@ def map_step_fused(
     label-dependent neighborhood count) plus one fused kernel launch; the
     unfused static mode issues three segment-sums and two vote scatters on
     top of the elementwise energy graph.
+
+    Under a sharded context the kernel runs unchanged per shard (its inputs
+    are the shard's hood elements plus globally-reduced counts) and the
+    collectives stay *outside* the launch: the pre-kernel n1 count is a
+    psum'd segment sum, the post-kernel hood sums and vote field are psum'd
+    partials.
     """
     x = labels[hoods.vertex]
-    xf = x.astype(jnp.float32) * ctx.validf
-    n1 = dpp.reduce_by_key(
-        hoods.hood_id, xf, hoods.n_hoods + 1, op="add", backend=backend
-    )
+    xf = x.astype(jnp.float32) * sctx.validf
+    n1 = ctx.segment_sum(hoods.hood_id, xf, hoods.n_hoods + 1, backend=backend)
     sig = jnp.maximum(sigma, model.sigma_min)
     _, _, hood_e, votes1 = kops.fused_map_step(
-        ctx.y,
-        ctx.w,
+        sctx.y,
+        sctx.w,
         n1[hoods.hood_id],
-        ctx.nall_e,
+        sctx.nall_e,
         xf,
-        ctx.validf,
+        sctx.validf,
         hoods.hood_id,
         hoods.vertex,
         mu,
@@ -308,7 +351,9 @@ def map_step_fused(
         n_vertices=hoods.n_regions + 1,
         backend=backend,
     )
-    new = (votes1 * 2.0 > ctx.votes_all).astype(jnp.int32)
+    hood_e = ctx.psum(hood_e)
+    votes1 = ctx.psum(votes1)
+    new = (votes1 * 2.0 > sctx.votes_all).astype(jnp.int32)
     return new.at[hoods.n_regions].set(0), hood_e
 
 

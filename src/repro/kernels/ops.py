@@ -19,9 +19,10 @@ Backend resolution order, per call:
    else ``xla``.
 
 Library code calls the wrappers below, never the kernels directly; new
-lowerings plug in via :func:`register` without touching call sites.  The
-legacy ``use_pallas=`` boolean is still accepted and maps onto the backend
-names (True -> pallas on the current platform, False -> xla).
+lowerings plug in via :func:`register` without touching call sites.  (The
+pre-registry ``use_pallas=`` boolean went through its one-release
+deprecation window and has been removed; pass ``backend=`` or configure
+``repro.api.ExecutionConfig(backend=...)``.)
 """
 
 from __future__ import annotations
@@ -114,26 +115,6 @@ def backend_explicitly_requested(backend: Optional[str]) -> bool:
     return bool(os.environ.get(ENV_VAR)) or _default_override is not None
 
 
-def _legacy(backend: Optional[str], use_pallas: Optional[bool]) -> Optional[str]:
-    """One-release warning shim for the pre-registry ``use_pallas=`` boolean.
-
-    All in-repo call sites now pass ``backend=`` (or route through
-    ``repro.api.ExecutionConfig``); this keeps external callers working for
-    one release while telling them where to go.
-    """
-    if use_pallas is None:
-        return backend
-    if backend is not None:
-        raise ValueError("pass either backend= or use_pallas=, not both")
-    warnings.warn(
-        "use_pallas= is deprecated and will be removed; pass backend="
-        "'pallas'/'xla' or set repro.api.ExecutionConfig(backend=...)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-    return "pallas" if use_pallas else "xla"
-
-
 def _dispatch(op: str, backend: str) -> Callable:
     try:
         return _REGISTRY[(op, backend)]
@@ -165,9 +146,8 @@ def segment_reduce(
     op: str = "add",
     *,
     backend: Optional[str] = None,
-    use_pallas: Optional[bool] = None,
 ) -> Array:
-    backend = resolve_backend(_legacy(backend, use_pallas))
+    backend = resolve_backend(backend)
     return _dispatch("segment_reduce", backend)(values, segment_ids, num_segments, op)
 
 
@@ -199,9 +179,8 @@ def mrf_min_energy(
     beta,
     *,
     backend: Optional[str] = None,
-    use_pallas: Optional[bool] = None,
 ) -> Tuple[Array, Array]:
-    backend = resolve_backend(_legacy(backend, use_pallas))
+    backend = resolve_backend(backend)
     return _dispatch("mrf_min_energy", backend)(y, w, n1_e, nall_e, xf, mu, sigma, beta)
 
 
@@ -308,11 +287,10 @@ def flash_attention(
     causal: bool = False,
     scale: Optional[float] = None,
     backend: Optional[str] = None,
-    use_pallas: Optional[bool] = None,
     block_q: int = 128,
     block_k: int = 128,
 ) -> Array:
-    backend = resolve_backend(_legacy(backend, use_pallas))
+    backend = resolve_backend(backend)
     return _dispatch("flash_attention", backend)(
         q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k
     )

@@ -10,10 +10,17 @@ first run paying the compile and the rest reusing it).
 Reports the paper's verification metrics (precision/recall/accuracy/
 porosity), phase timings, and the session's cache statistics.
 
+Multi-device: ``--shards N`` block-partitions each slice's hood elements
+over an N-device mesh (DESIGN.md §11).  On CPU the devices are virtual —
+the launcher injects ``--xla_force_host_platform_device_count=N`` into
+``XLA_FLAGS`` before JAX initializes, so plain
+``python -m repro.launch.segment --shards 8`` works on a laptop.
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.segment --slices 2 --size 96 \
         --mode static --backend auto --repeat 3 --dataset synthetic
+    PYTHONPATH=src python -m repro.launch.segment --shards 8 --mode static
 """
 
 from __future__ import annotations
@@ -23,10 +30,6 @@ import json
 import time
 
 import numpy as np
-
-from repro import api
-from repro.core import metrics as M
-from repro.core import synthetic as S
 
 
 def main() -> None:
@@ -53,11 +56,26 @@ def main() -> None:
         help="micro-batch slices via submit/drain; auto batches only where "
         "it pays (accelerators, bounded capacity spread)",
     )
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="block-partition hood elements over an N-device mesh; on CPU "
+        "this forces N virtual host devices (usable anywhere)",
+    )
     ap.add_argument("--dataset", choices=("synthetic", "experimental"),
                     default="synthetic")
     ap.add_argument("--init", choices=("random", "quantile"), default="quantile")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.shards > 1:
+        # Must land before the first jax import (repro.xla_env docstring).
+        from repro.xla_env import force_host_device_count
+
+        force_host_device_count(args.shards)
+
+    from repro import api
+    from repro.core import metrics as M
+    from repro.core import synthetic as S
 
     if args.dataset == "synthetic":
         vol = S.make_synthetic_volume(
@@ -75,6 +93,7 @@ def main() -> None:
             mode=args.mode,
             init=args.init,
             overseg_grid=(args.grid, args.grid),
+            shards=args.shards,
         )
     )
 
@@ -114,6 +133,7 @@ def main() -> None:
         "mean_accuracy": round(acc, 4),
         "mean_optimize_s": round(opt, 3),
         "backend": sess.config.resolved_backend(),
+        "shards": sess.config.shards,
         "executables_cached": len(sess.cache_keys),
     }))
 

@@ -1,0 +1,37 @@
+"""Pre-JAX-import environment helpers.
+
+Deliberately imports nothing from ``jax``: the XLA client reads
+``XLA_FLAGS`` exactly once, at backend initialization, so callers (the
+segmentation CLI's ``--shards``, the sharded benchmark's child launch)
+must mutate the environment *before* the first ``import jax`` — or build
+the environment of a subprocess that hasn't started yet.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import MutableMapping, Optional
+
+FORCE_HOST_DEVICES_FLAG = "xla_force_host_platform_device_count"
+
+
+def force_host_device_count(
+    n: int, env: Optional[MutableMapping[str, str]] = None
+) -> MutableMapping[str, str]:
+    """Append ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    unless some device-count flag is already present (an explicit user
+    setting wins).  Mutates and returns ``env`` (default: ``os.environ``).
+
+    Harmless on accelerator platforms — the flag only multiplies *host*
+    (CPU) devices, which is what makes sharded execution testable on a
+    laptop (DESIGN.md §11).
+    """
+    if env is None:
+        env = os.environ
+    flags = env.get("XLA_FLAGS", "")
+    if FORCE_HOST_DEVICES_FLAG not in flags:
+        env["XLA_FLAGS"] = f"{flags} --{FORCE_HOST_DEVICES_FLAG}={n}".strip()
+    return env
+
+
+__all__ = ["FORCE_HOST_DEVICES_FLAG", "force_host_device_count"]

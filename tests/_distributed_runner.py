@@ -61,6 +61,8 @@ def check_sharded_dpps():
 
 
 def check_distributed_em():
+    """The unified collective-parametrized driver (DESIGN.md §11): sharded
+    results bit-identical to single-device for ALL THREE execution modes."""
     from repro.core import synthetic
     from repro.core.pmrf import EMConfig, initialize, run_em
     from repro.core.pmrf import em as em_mod
@@ -74,18 +76,57 @@ def check_distributed_em():
     problem = initialize(img, overseg_grid=(8, 8))
     labels0, mu0, sigma0 = em_mod.init_params(jax.random.PRNGKey(0), problem.graph.n_regions)
 
-    ref = run_em(problem.hoods, problem.model, labels0, mu0, sigma0, EMConfig(mode="static"))
-    dist = distributed_em(
-        problem.hoods, problem.model, labels0, mu0, sigma0, mesh, "data",
-        EMConfig(mode="static"),
-    )
-    np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(dist.labels))
-    np.testing.assert_allclose(np.asarray(ref.mu), np.asarray(dist.mu), rtol=1e-5)
-    np.testing.assert_allclose(
-        float(ref.total_energy), float(dist.total_energy), rtol=1e-4
-    )
-    assert int(ref.em_iters) == int(dist.em_iters)
-    print("distributed EM OK (bit-identical labels, em_iters=%d)" % int(ref.em_iters))
+    for mode in ("faithful", "static", "static-pallas"):
+        config = EMConfig(mode=mode)
+        ref = run_em(problem.hoods, problem.model, labels0, mu0, sigma0, config)
+        dist = distributed_em(
+            problem.hoods, problem.model, labels0, mu0, sigma0, mesh, "data", config
+        )
+        np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(dist.labels))
+        np.testing.assert_allclose(np.asarray(ref.mu), np.asarray(dist.mu), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(ref.total_energy), float(dist.total_energy), rtol=1e-4
+        )
+        assert int(ref.em_iters) == int(dist.em_iters), mode
+        print("  %s: bit-identical labels, em_iters=%d" % (mode, int(ref.em_iters)))
+    print("distributed EM OK (all modes)")
+
+
+def check_session_sharded():
+    """Session-layer sharding: ExecutionConfig(shards=8) compiles/caches a
+    sharded executable (shards in the key), matches the unsharded result,
+    and warm hits perform zero traces.
+
+    Deliberately twins tests/test_sharded_em.py's in-process variant: that
+    one only *runs* when the process already has 8 devices (the
+    tier1-multidevice CI job), so this subprocess check is what guards the
+    sharded session path in the default single-device tier-1 suite.
+    """
+    from repro import api
+    from repro.core import synthetic
+    from repro.core.pmrf import em as em_mod
+
+    vol = synthetic.make_synthetic_volume(seed=3, n_slices=1, shape=(44, 44))
+    img = np.asarray(vol.images[0])
+    base = api.Segmenter(api.ExecutionConfig(overseg_grid=(6, 6)))
+    sharded = api.Segmenter(api.ExecutionConfig(overseg_grid=(6, 6), shards=8))
+
+    ref = base.segment(img, seed=0)
+    plan = sharded.plan(img)
+    got = sharded.execute(plan, seed=0)
+    np.testing.assert_array_equal(ref.segmentation, got.segmentation)
+    np.testing.assert_array_equal(ref.region_labels, got.region_labels)
+    assert ref.em_iters == got.em_iters
+
+    assert sharded.cache_keys[0].shards == 8
+    assert base.cache_keys[0].shards == 1
+    assert sharded.cache_keys[0] != base.cache_keys[0]
+    before = dict(em_mod.TRACE_COUNTS)
+    assert before["run_em_sharded"] >= 1
+    sharded.execute(plan, seed=0)
+    assert em_mod.TRACE_COUNTS == before, "warm sharded execute traced"
+    assert sharded.stats.hits == 1
+    print("session sharded OK (shards=8 key, zero-trace warm hit)")
 
 
 def _mini_shape(name, seq, batch, kind):
@@ -267,6 +308,8 @@ if __name__ == "__main__":
         check_sharded_dpps()
     if which in ("all", "em"):
         check_distributed_em()
+    if which in ("all", "session"):
+        check_session_sharded()
     if which in ("all", "minidryrun"):
         check_mini_dryrun()
     if which in ("all", "codec"):

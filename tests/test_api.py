@@ -5,8 +5,9 @@ Covers the acceptance bar of the api_redesign PR: a second same-bucket
 ``em.TRACE_COUNTS``, the same helper test_fused_map.py uses), 8 same-bucket
 ``submit``s compile once and match 8 serial ``segment_image`` calls
 bit-identically, different buckets miss, eviction respects the configured
-max size, and the legacy surfaces (``segment_image``/``segment_volume``,
-``use_pallas=``) warn but keep working.
+max size, and the legacy surfaces (``segment_image``/``segment_volume``)
+warn but keep working.  The pre-registry ``use_pallas=`` boolean completed
+its one-release deprecation window and is rejected outright.
 """
 
 import jax
@@ -259,12 +260,18 @@ def test_segment_volume_shim_warns_and_validates():
             pipeline.segment_volume([np.zeros((8, 8))], batch="maybe")
 
 
-def test_use_pallas_kwarg_warns_once_release_shim():
+def test_use_pallas_kwarg_removed():
+    # The one-release warning shim shipped its release: use_pallas= is no
+    # longer a recognized kwarg anywhere in the dispatch layer.
     vals = jnp.asarray(np.arange(12, dtype=np.float32))
     segs = jnp.asarray(np.arange(12, dtype=np.int32) % 3)
-    with pytest.warns(DeprecationWarning, match="use_pallas"):
-        out = kops.segment_reduce(vals, segs, 3, "add", use_pallas=False)
-    want = kops.segment_reduce(vals, segs, 3, "add", backend="xla")
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
-    with pytest.raises(ValueError, match="not both"):
-        kops.segment_reduce(vals, segs, 3, "add", backend="xla", use_pallas=True)
+    with pytest.raises(TypeError, match="use_pallas"):
+        kops.segment_reduce(vals, segs, 3, "add", use_pallas=False)
+    with pytest.raises(TypeError, match="use_pallas"):
+        kops.flash_attention(
+            jnp.zeros((1, 1, 8, 4)), jnp.zeros((1, 1, 8, 4)),
+            jnp.zeros((1, 1, 8, 4)), use_pallas=True,
+        )
+    # the explicit backend= spelling is the supported surface
+    out = kops.segment_reduce(vals, segs, 3, "add", backend="xla")
+    assert out.shape == (3,)

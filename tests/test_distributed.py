@@ -39,7 +39,12 @@ def test_sharded_dpp_primitives_8dev():
 
 def test_distributed_em_matches_single_device_8dev():
     out = _run("em")
-    assert "distributed EM OK" in out
+    assert "distributed EM OK (all modes)" in out
+
+
+def test_session_sharded_executables_8dev():
+    out = _run("session")
+    assert "session sharded OK" in out
 
 
 def test_mini_dryrun_all_families_8dev():

@@ -211,12 +211,16 @@ def test_fused_path_issues_fewer_launches_per_iteration():
         hist=jnp.zeros((em_mod.WINDOW + 1, hoods.n_hoods), jnp.float32),
         hood_energy=jnp.zeros((hoods.n_hoods,), jnp.float32),
         i=jnp.int32(0),
+        done=jnp.bool_(False),
     )
 
-    def step(mode, backend, ctx):
+    def step(mode, backend, sctx):
         def f(labels, mu, sigma):
             c = carry._replace(labels=labels)
-            return em_mod._map_step(hoods, model, mode, backend, ctx, mu, sigma, c)
+            return em_mod._map_step(
+                hoods, model, mode, backend, sctx, em_mod.collectives.LOCAL,
+                mu, sigma, c,
+            )
 
         return jax.make_jaxpr(f)(labels0, mu0, sigma0).jaxpr
 

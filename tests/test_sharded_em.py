@@ -1,0 +1,270 @@
+"""Tests for the unified collective-parametrized EM driver (DESIGN.md §11).
+
+``distributed.py`` no longer carries its own MAP/EM loops — the single
+driver in ``em.py`` runs under a collective context, so parity between
+sharded and single-device execution is a property of the context hooks,
+not of two hand-synchronized code paths.  Covered here:
+
+* ``dpp_sharded.global_scan`` dtype-exactness for zero-length shards;
+* ``partition_hoods`` invariants (block-local replication arrays);
+* sharded-vs-single-device parity for all three modes on whatever mesh
+  the process has (1 device exercises the full shard_map path; the CI
+  ``tier1-multidevice`` job runs this file under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for true
+  8-way parity *in-process* — no subprocess roundtrip);
+* session-layer sharding: ``shards`` in ``ExecutableKey`` (sharded and
+  unsharded compiles never alias), warm sharded cache hits doing zero
+  traces (``em.TRACE_COUNTS``), and config validation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import dpp_sharded, synthetic
+from repro.core.pmrf import EMConfig, initialize
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf.distributed import distributed_em, partition_hoods
+from jax.sharding import Mesh
+
+requires_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+    "(the tier1-multidevice CI job)",
+)
+
+
+def _problem(shape=(48, 48), grid=(6, 6), seed=0):
+    vol = synthetic.make_synthetic_volume(seed=seed, n_slices=1, shape=shape)
+    problem = initialize(np.asarray(vol.images[0]), overseg_grid=grid)
+    labels0, mu0, sigma0 = em_mod.init_params(
+        jax.random.PRNGKey(0), problem.graph.n_regions
+    )
+    return problem, labels0, mu0, sigma0
+
+
+# ---------------------------------------------------------------------------
+# dpp_sharded.global_scan: zero-length shards
+# ---------------------------------------------------------------------------
+
+
+def test_global_scan_empty_shard_dtype_exact():
+    # cumsum promotes narrow ints (int16 -> int32, bool -> int32); the
+    # empty-shard total must take the same promotion path, so the scan's
+    # result dtype is identical whether or not shards hold elements.
+    for dtype in (jnp.int16, jnp.bool_, jnp.float32):
+        want_dtype = jnp.cumsum(jnp.zeros((1,), dtype)).dtype
+        scan = jax.vmap(
+            lambda v: dpp_sharded.global_scan(v, "shards"), axis_name="shards"
+        )
+        empty = scan(jnp.zeros((4, 0), dtype))
+        assert empty.shape == (4, 0)
+        assert empty.dtype == want_dtype, (dtype, empty.dtype, want_dtype)
+        nonempty = scan(jnp.ones((4, 3), dtype))
+        assert nonempty.dtype == want_dtype
+        np.testing.assert_array_equal(
+            np.asarray(nonempty).reshape(-1), np.arange(1, 13)
+        )
+
+
+def test_global_scan_empty_shard_exclusive_and_2d():
+    scan = jax.vmap(
+        lambda v: dpp_sharded.global_scan(v, "s", exclusive=True), axis_name="s"
+    )
+    out = scan(jnp.zeros((3, 0, 5), jnp.int16))
+    assert out.shape == (3, 0, 5)
+    assert out.dtype == jnp.cumsum(jnp.zeros((1,), jnp.int16)).dtype
+
+
+# ---------------------------------------------------------------------------
+# partition_hoods: block-local replication invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_partition_hoods_invariants(n_shards):
+    problem, *_ = _problem()
+    h = problem.hoods
+    parts = partition_hoods(h, n_shards)
+
+    assert parts.capacity % n_shards == 0
+    block = parts.capacity // n_shards
+    cap = h.capacity
+
+    # element arrays: original data in the prefix, sentinels beyond
+    np.testing.assert_array_equal(np.asarray(parts.vertex)[:cap], np.asarray(h.vertex))
+    np.testing.assert_array_equal(np.asarray(parts.valid)[:cap], np.asarray(h.valid))
+    assert not np.asarray(parts.valid)[cap:].any()
+
+    # replication arrays: valid-lane count preserved, every lane local to
+    # its block, and the (global element, test label) multiset unchanged
+    rv, ro, rt = (np.asarray(parts.rep_valid), np.asarray(parts.rep_old_index),
+                  np.asarray(parts.rep_test_label))
+    assert rv.sum() == np.asarray(h.rep_valid).sum()
+    assert ro.min() >= 0 and ro.max() < block
+    shard_of_lane = np.arange(2 * parts.capacity) // (2 * block)
+    global_old = shard_of_lane * block + ro
+    got = sorted(zip(global_old[rv].tolist(), rt[rv].tolist()))
+    hv = np.asarray(h.rep_valid)
+    want = sorted(
+        zip(np.asarray(h.rep_old_index)[hv].tolist(),
+            np.asarray(h.rep_test_label)[hv].tolist())
+    )
+    assert got == want
+    # every element owns exactly two rep lanes (one per candidate label)
+    counts = np.bincount(global_old[rv], minlength=parts.capacity)
+    valid_elements = np.asarray(parts.valid)
+    assert (counts[valid_elements] == 2).all()
+    assert (counts[~valid_elements] == 0).all()
+
+
+def test_partition_hoods_single_shard_is_identity():
+    problem, *_ = _problem()
+    assert partition_hoods(problem.hoods, 1) is problem.hoods
+
+
+# ---------------------------------------------------------------------------
+# sharded driver parity (whatever mesh this process has; 8-way in CI)
+# ---------------------------------------------------------------------------
+
+
+def _mesh():
+    n = min(8, jax.device_count())
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+@pytest.mark.parametrize("mode", ["faithful", "static", "static-pallas"])
+def test_distributed_em_matches_single_device(mode):
+    problem, labels0, mu0, sigma0 = _problem()
+    config = EMConfig(mode=mode)
+    ref = em_mod.run_em(problem.hoods, problem.model, labels0, mu0, sigma0, config)
+    dist = distributed_em(
+        problem.hoods, problem.model, labels0, mu0, sigma0, _mesh(), "data", config
+    )
+    np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(dist.labels))
+    np.testing.assert_allclose(np.asarray(ref.mu), np.asarray(dist.mu), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ref.sigma), np.asarray(dist.sigma), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(ref.total_energy), float(dist.total_energy), rtol=1e-4
+    )
+    assert int(ref.em_iters) == int(dist.em_iters)
+    assert int(ref.map_iters) == int(dist.map_iters)
+
+
+@requires_8_devices
+@pytest.mark.parametrize("mode", ["faithful", "static", "static-pallas"])
+def test_distributed_em_8dev_inprocess(mode):
+    # True 8-way parity without the subprocess roundtrip of
+    # tests/test_distributed.py (CI runs this file with 8 host devices).
+    problem, labels0, mu0, sigma0 = _problem(shape=(64, 64), grid=(8, 8))
+    mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+    config = EMConfig(mode=mode)
+    ref = em_mod.run_em(problem.hoods, problem.model, labels0, mu0, sigma0, config)
+    dist = distributed_em(
+        problem.hoods, problem.model, labels0, mu0, sigma0, mesh, "data", config
+    )
+    np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(dist.labels))
+    assert int(ref.em_iters) == int(dist.em_iters)
+
+
+# ---------------------------------------------------------------------------
+# session layer: shards as a first-class cache-key axis
+# ---------------------------------------------------------------------------
+
+
+def _session_config(**kw):
+    kw.setdefault("overseg_grid", (6, 6))
+    return api.ExecutionConfig(**kw)
+
+
+def test_config_validates_sharding_knobs():
+    with pytest.raises(ValueError, match="shards"):
+        api.ExecutionConfig(shards=0)
+    with pytest.raises(ValueError, match="mesh_axis"):
+        api.ExecutionConfig(mesh_axis="")
+    assert api.ExecutionConfig(shards=8).shards == 8
+
+
+def test_sharded_key_never_aliases_unsharded():
+    # Pure key construction — no devices needed: the only differing config
+    # field is `shards`, and the keys must still be distinct.
+    bucket = api.BucketKey(512, 64, 64)
+    keys = {
+        api.Segmenter(_session_config(shards=s))._key_for(bucket, None)
+        for s in (1, 2, 8)
+    }
+    assert len(keys) == 3
+    k1 = api.Segmenter(_session_config(shards=1))._key_for(bucket, None)
+    k8 = api.Segmenter(_session_config(shards=8))._key_for(bucket, None)
+    assert k1.shards == 1 and k8.shards == 8
+    assert k1._replace(shards=8) == k8  # shards is the *only* difference
+
+
+def test_compile_rejects_batch_with_shards():
+    seg = api.Segmenter(_session_config(shards=2))
+    with pytest.raises(ValueError, match="shards"):
+        seg.compile(api.BucketKey(256, 64, 64), batch=4)
+
+
+def test_segment_stack_rejects_explicit_batch_with_shards():
+    # Same contract as compile(batch=...): explicit batching requests fail
+    # loudly on sharded sessions; "auto" silently runs serially instead.
+    seg = api.Segmenter(_session_config(shards=2))
+    with pytest.raises(ValueError, match="batch='always'"):
+        seg.segment_stack([np.zeros((8, 8))], batch="always")
+
+
+def test_mesh_errors_actionably_without_devices():
+    n = jax.device_count() + 1
+    seg = api.Segmenter(_session_config(shards=n))
+    with pytest.raises(RuntimeError, match="xla_force_host_platform_device_count"):
+        seg.mesh()
+
+
+@requires_8_devices
+def test_sharded_session_matches_unsharded_and_caches():
+    jax.clear_caches()
+    api.reset_sessions()
+    em_mod.reset_trace_counts()
+    vol = synthetic.make_synthetic_volume(seed=3, n_slices=1, shape=(44, 44))
+    img = np.asarray(vol.images[0])
+
+    base = api.Segmenter(_session_config(shards=1))
+    sharded = api.Segmenter(_session_config(shards=8))
+    plan_a, plan_b = base.plan(img), sharded.plan(img)
+    assert plan_a.bucket == plan_b.bucket  # same bucket, different key axis
+
+    ref = base.execute(plan_a, seed=0)
+    got = sharded.execute(plan_b, seed=0)
+    np.testing.assert_array_equal(ref.region_labels, got.region_labels)
+    np.testing.assert_array_equal(ref.segmentation, got.segmentation)
+    assert ref.em_iters == got.em_iters
+
+    # distinct executables for the same bucket (shards in the key)...
+    assert base.cache_keys[0] != sharded.cache_keys[0]
+    assert sharded.cache_keys[0].shards == 8
+    # ...and a warm sharded hit performs ZERO traces of any driver
+    before = dict(em_mod.TRACE_COUNTS)
+    assert before["run_em_sharded"] >= 1
+    again = sharded.execute(plan_b, seed=0)
+    assert em_mod.TRACE_COUNTS == before, "warm sharded execute must not trace"
+    assert sharded.stats.hits == 1
+    np.testing.assert_array_equal(got.segmentation, again.segmentation)
+
+
+@requires_8_devices
+def test_sharded_drain_runs_serially_through_mesh():
+    api.reset_sessions()
+    seg = api.Segmenter(_session_config(shards=8, capacity_bucket=2048))
+    vol = synthetic.make_synthetic_volume(seed=5, n_slices=3, shape=(44, 44))
+    for im in vol.images:
+        seg.submit(np.asarray(im))
+    results = seg.drain()
+    assert len(results) == 3
+    # one sharded executable, reused; no batch-N program was compiled
+    assert {k.batch for k in seg.cache_keys} == {None}
+    assert all(k.shards == 8 for k in seg.cache_keys)
