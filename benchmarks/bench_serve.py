@@ -1,0 +1,172 @@
+"""Serving-engine throughput: serial vs lockstep-batched vs continuous.
+
+The workload is the exact case that produced BENCH_api.json's
+``batched_speedup_x: 0.45`` inversion: a stream of same-bucket requests
+with deliberately mixed convergence iteration counts.  Three ways to serve
+it, all through one warm session (compiles excluded from every timing):
+
+* ``serial``       — one warm ``execute()`` per request; each request pays
+                     exactly its own iterations, plus per-request dispatch.
+* ``lockstep8``    — ``submit()``/``drain()`` micro-batching in groups of
+                     8: one vmapped ``run_em_batched`` launch per group, so
+                     every lane pays the *slowest* lane's (EM- and
+                     MAP-level) iteration count.
+* ``continuous8``  — the ticked serving engine (DESIGN.md §12): 8 slots,
+                     converged lanes retired and refilled between ticks, so
+                     a lane only ever pays its own iterations plus at most
+                     one tick of granularity waste.
+
+Emits ``BENCH_serve.json`` with wall/throughput/latency percentiles per
+path.  The acceptance target of the serving PR: ``continuous8`` at or
+above serial throughput on CPU (lockstep sits well below), with
+per-request labels bit-identical to serial ``run_em``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_csv
+from repro import api
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+from repro.serving import SegmentationEngine
+
+OUT_PATH = pathlib.Path("BENCH_serve.json")
+N_REQUESTS = 24
+SLOTS = 8
+TICK_ITERS = 8
+SHAPE = (96, 96)
+GRID = (12, 12)
+
+
+def _percentiles(lat):
+    lat = np.asarray(lat, np.float64)
+    return {
+        "latency_p50_s": round(float(np.percentile(lat, 50)), 5),
+        "latency_p95_s": round(float(np.percentile(lat, 95)), 5),
+    }
+
+
+def run() -> dict:
+    jax.clear_caches()
+    api.reset_sessions()
+    em_mod.reset_trace_counts()
+
+    cfg = api.ExecutionConfig(overseg_grid=GRID, capacity_bucket=4096)
+    sess = api.Segmenter(cfg)
+    vol = synthetic.make_synthetic_volume(
+        seed=0, n_slices=N_REQUESTS, shape=SHAPE
+    )
+    plans = [sess.plan(np.asarray(im)) for im in vol.images]
+    bucket = api.BucketKey(*(max(p.bucket[d] for p in plans) for d in range(3)))
+
+    # Warm every executable + padding memo up front: this bench measures
+    # steady-state serving, compiles are BENCH_api.json's subject.
+    sess.compile(bucket)
+    sess.compile(bucket, batch=SLOTS)
+    sess.compile_ticked(bucket, batch=SLOTS, tick_iters=TICK_ITERS)
+    serial_results = [
+        sess.execute(p, bucket=bucket) for p in plans
+    ]  # also warms _pad_plan memos
+
+    # -- serial: per-request latency is each request's own execute. -------
+    t0 = time.perf_counter()
+    lat_serial = []
+    for p in plans:
+        t1 = time.perf_counter()
+        sess.execute(p, bucket=bucket)
+        lat_serial.append(time.perf_counter() - t1)
+    serial_wall = time.perf_counter() - t0
+
+    # -- lockstep: groups of 8 through one vmapped launch each. -----------
+    t0 = time.perf_counter()
+    lat_lockstep = []
+    for start in range(0, N_REQUESTS, SLOTS):
+        group = plans[start:start + SLOTS]
+        t1 = time.perf_counter()
+        for p in group:
+            sess.submit(p, bucket=bucket)
+        sess.drain()
+        lat_lockstep.extend([time.perf_counter() - t1] * len(group))
+    lockstep_wall = time.perf_counter() - t0
+
+    # -- continuous: the ticked engine over the same stream. ---------------
+    engine = SegmentationEngine(
+        sess, max_batch=SLOTS, tick_iters=TICK_ITERS, bucket=bucket
+    )
+    t0 = time.perf_counter()
+    for rid, p in enumerate(plans):
+        engine.submit(p, rid=rid)
+    completions = engine.run()
+    continuous_wall = time.perf_counter() - t0
+    lat_continuous = [c.latency_s for c in completions]
+
+    # Per-request label bit-identity vs serial run_em (the §12 contract).
+    identical = all(
+        np.array_equal(c.result.region_labels, serial_results[c.rid].region_labels)
+        and np.array_equal(c.result.mu, serial_results[c.rid].mu)
+        and c.result.em_iters == serial_results[c.rid].em_iters
+        for c in completions
+    )
+
+    em_iters = [r.em_iters for r in serial_results]
+    return {
+        "n_requests": N_REQUESTS,
+        "slots": SLOTS,
+        "tick_iters": TICK_ITERS,
+        "bucket": list(bucket),
+        "backend": cfg.resolved_backend(),
+        "jax_backend": jax.default_backend(),
+        "em_iters_min_mean_max": [
+            int(min(em_iters)),
+            round(float(np.mean(em_iters)), 2),
+            int(max(em_iters)),
+        ],
+        "serial": {
+            "wall_s": round(serial_wall, 4),
+            "throughput_rps": round(N_REQUESTS / serial_wall, 3),
+            **_percentiles(lat_serial),
+        },
+        "lockstep8": {
+            "wall_s": round(lockstep_wall, 4),
+            "throughput_rps": round(N_REQUESTS / lockstep_wall, 3),
+            **_percentiles(lat_lockstep),
+        },
+        "continuous8": {
+            "wall_s": round(continuous_wall, 4),
+            "throughput_rps": round(N_REQUESTS / continuous_wall, 3),
+            **_percentiles(lat_continuous),
+            "engine": engine.stats(),
+        },
+        "lockstep_vs_serial_x": round(serial_wall / lockstep_wall, 2),
+        "continuous_vs_serial_x": round(serial_wall / continuous_wall, 2),
+        "labels_identical_to_serial": bool(identical),
+        "trace_counts": dict(em_mod.TRACE_COUNTS),
+    }
+
+
+def main() -> None:
+    result = run()
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    print_csv(
+        f"serving: serial vs lockstep vs continuous -> {OUT_PATH}",
+        ["serial_s", "lockstep8_s", "continuous8_s", "lockstep_x",
+         "continuous_x", "identical"],
+        [(result["serial"]["wall_s"], result["lockstep8"]["wall_s"],
+          result["continuous8"]["wall_s"], result["lockstep_vs_serial_x"],
+          result["continuous_vs_serial_x"],
+          result["labels_identical_to_serial"])],
+    )
+    assert result["labels_identical_to_serial"], (
+        "continuous serving must be bit-identical to serial run_em"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ One section per paper table/figure + the framework benches:
                         batched vs serial throughput; emits BENCH_api.json
     sharded             multi-device EM: 1 vs 8 shards, static and
                         static-pallas; emits BENCH_sharded.json
+    serve               serving engine: serial vs lockstep-batched vs
+                        continuous ticked batching; emits BENCH_serve.json
     kernels             Pallas kernels vs jnp oracles
     roofline            (arch x shape) roofline table from the dry-run
 
@@ -26,7 +28,7 @@ import traceback
 
 SECTIONS = (
     "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "api", "sharded",
-    "kernels", "roofline",
+    "serve", "kernels", "roofline",
 )
 
 

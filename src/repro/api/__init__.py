@@ -14,6 +14,10 @@ Quickstart::
         seg.submit(img)
     results = seg.drain()
 
+Continuous serving traffic goes through the ticked engine surface
+(:meth:`Segmenter.compile_ticked` / ``ticked_pool`` / ``lane_inputs``,
+DESIGN.md §12) — driven by ``repro.serving.SegmentationEngine``.
+
 The legacy one-shot functions (``repro.core.pmrf.pipeline.segment_image`` /
 ``segment_volume``) are deprecation shims over :func:`session_for`.
 """

@@ -65,6 +65,11 @@ class ExecutableKey(NamedTuple):
     is the mesh-axis size the program was compiled for (1 = single-device):
     a sharded compile consumes partitioned inputs and emits an SPMD
     program, so it must never alias an unsharded one in the LRU cache.
+    ``tick_iters`` is ``None`` for the run-to-convergence drivers or the
+    per-call micro-step chunk for a ticked serving executable
+    (:meth:`Segmenter.compile_ticked`, DESIGN.md §12) — a ticked program
+    consumes pool state, not initial parameters, so it never aliases a
+    ``run_em`` compile.
     """
 
     capacity: int
@@ -76,6 +81,7 @@ class ExecutableKey(NamedTuple):
     max_map_iters: int
     batch: Optional[int]
     shards: int
+    tick_iters: Optional[int] = None
 
 
 @dataclass
@@ -104,9 +110,9 @@ class Executable:
     compile_seconds: float
     calls: int = 0
 
-    def __call__(self, hoods, model, labels0, mu0, sigma0) -> em_mod.EMResult:
+    def __call__(self, *inputs):
         self.calls += 1
-        return self.compiled(hoods, model, labels0, mu0, sigma0)
+        return self.compiled(*inputs)
 
 
 @dataclass
@@ -175,6 +181,39 @@ def _abstract_inputs(bucket: BucketKey, batch: Optional[int], shards: int = 1):
     return hoods, model, labels0, mu0, sigma0
 
 
+def _abstract_tick_state(bucket: BucketKey, batch: int):
+    """ShapeDtypeStruct pytree for a ticked pool's state (mirrors
+    ``em.blank_tick_state`` exactly — the AOT program must accept the
+    engine's live pool)."""
+    _, nh, nr = bucket
+    w = em_mod.WINDOW + 1
+
+    def arr(shape, dtype):
+        return jax.ShapeDtypeStruct((batch,) + shape, dtype)
+
+    return em_mod.TickState(
+        labels=arr((nr + 1,), jnp.int32),
+        mu=arr((2,), jnp.float32),
+        sigma=arr((2,), jnp.float32),
+        map_hist=arr((w, nh), jnp.float32),
+        map_i=arr((), jnp.int32),
+        map_done=arr((), jnp.bool_),
+        hood_energy=arr((nh,), jnp.float32),
+        total_hist=arr((w,), jnp.float32),
+        em_i=arr((), jnp.int32),
+        map_total=arr((), jnp.int32),
+        done=arr((), jnp.bool_),
+    )
+
+
+def _abstract_vote_plan(bucket: BucketKey, batch: int):
+    cap, _, nr = bucket
+    return em_mod.TickVotePlan(
+        perm=jax.ShapeDtypeStruct((batch, cap), jnp.int32),
+        bounds=jax.ShapeDtypeStruct((batch, nr + 2), jnp.int32),
+    )
+
+
 class Segmenter:
     """A segmentation session: one execution policy, one executable cache.
 
@@ -221,7 +260,12 @@ class Segmenter:
     # phase 2: compile (cached)
     # ------------------------------------------------------------------
 
-    def _key_for(self, bucket: BucketKey, batch: Optional[int]) -> ExecutableKey:
+    def _key_for(
+        self,
+        bucket: BucketKey,
+        batch: Optional[int],
+        tick_iters: Optional[int] = None,
+    ) -> ExecutableKey:
         c = self.config
         return ExecutableKey(
             capacity=bucket.capacity,
@@ -233,6 +277,7 @@ class Segmenter:
             max_map_iters=c.max_map_iters,
             batch=batch,
             shards=c.shards,
+            tick_iters=tick_iters,
         )
 
     def mesh(self) -> Mesh:
@@ -303,6 +348,108 @@ class Segmenter:
             self._cache.popitem(last=False)
             self.stats.evictions += 1
         return exe
+
+    def compile_ticked(
+        self,
+        target: Union[Plan, BucketKey, Tuple[int, int, int]],
+        *,
+        batch: int,
+        tick_iters: int = 8,
+    ) -> Executable:
+        """Compile (or fetch) the ticked serving executable for a bucket.
+
+        The program is ``em.run_em_ticked`` over a ``batch``-slot pool:
+        each call advances every non-``done`` lane by ``tick_iters`` masked
+        micro-steps and returns the new pool state.  It shares the session
+        LRU cache with the run-to-convergence executables (distinct
+        ``ExecutableKey.tick_iters``) and performs zero traces on a warm
+        hit.  The serving engine (``repro.serving``) is the intended
+        caller; see DESIGN.md §12 for the slot/tick/masking contract.
+        """
+        bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
+        if self.config.shards > 1:
+            raise ValueError(
+                "ticked serving executables are single-device (the pool's "
+                "slot axis is the parallel axis); use shards=1"
+            )
+        if batch < 1 or tick_iters < 1:
+            raise ValueError("compile_ticked needs batch >= 1 and tick_iters >= 1")
+        key = self._key_for(bucket, batch, tick_iters=tick_iters)
+        exe = self._cache.get(key)
+        if exe is not None:
+            self._cache.move_to_end(key)
+            self.stats.hits += 1
+            return exe
+
+        self.stats.misses += 1
+        em_config = self.config.em_config()
+        hoods_abs, model_abs, *_ = _abstract_inputs(bucket, batch)
+        state_abs = _abstract_tick_state(bucket, batch)
+        plan_abs = _abstract_vote_plan(bucket, batch)
+        t0 = time.perf_counter()
+        compiled = em_mod.run_em_ticked.lower(
+            hoods_abs, model_abs, state_abs, plan_abs, em_config, tick_iters
+        ).compile()
+        exe = Executable(
+            key=key,
+            compiled=compiled,
+            em_config=em_config,
+            compile_seconds=time.perf_counter() - t0,
+        )
+        self._cache[key] = exe
+        while len(self._cache) > self.config.max_cached_executables:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+        return exe
+
+    def ticked_pool(self, target, *, batch: int):
+        """An all-empty slot pool for a ticked executable — ``(hoods,
+        model, state, vote_plan)`` with blank (sentinel) hoods/model lanes,
+        ``em.blank_tick_state`` (every lane ``done``, ready for admission)
+        and the matching blank vote plans.  Shapes match
+        :meth:`compile_ticked`'s abstract inputs exactly."""
+        bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
+        cap, nh, nr = bucket
+
+        def full(shape, fill, dtype):
+            return jnp.full((batch,) + shape, fill, dtype)
+
+        hoods = Hoods(
+            vertex=full((cap,), nr, jnp.int32),
+            hood_id=full((cap,), nh, jnp.int32),
+            valid=full((cap,), False, jnp.bool_),
+            sizes=full((nh,), 0, jnp.int32),
+            offsets=full((nh + 1,), 0, jnp.int32),
+            n_hoods=nh,
+            n_regions=nr,
+            n_elements=-1,
+            rep_old_index=full((2 * cap,), cap - 1, jnp.int32),
+            rep_test_label=full((2 * cap,), 0, jnp.int32),
+            rep_hood_id=full((2 * cap,), nh, jnp.int32),
+            rep_valid=full((2 * cap,), False, jnp.bool_),
+        )
+        model = energy_mod.EnergyModel(
+            region_mean=full((nr + 1,), 0.0, jnp.float32),
+            region_weight=full((nr + 1,), 0.0, jnp.float32),
+            beta=full((), self.config.beta, jnp.float32),
+            sigma_min=full((), 1.0, jnp.float32),
+            reseed_mu=full((2,), 0.0, jnp.float32),
+            reseed_sigma=full((), 1.0, jnp.float32),
+        )
+        state = em_mod.blank_tick_state(batch, nh, nr)
+        vote_plan = jax.vmap(lambda v: em_mod.make_vote_plan(v, nr))(hoods.vertex)
+        return hoods, model, state, vote_plan
+
+    def lane_inputs(
+        self, plan: Plan, *, bucket: Optional[BucketKey] = None, seed: int = 0
+    ):
+        """One request's padded per-lane inputs for a ticked pool:
+        ``(hoods, model, labels0, mu0, sigma0)`` — exactly the arrays the
+        serial :meth:`execute` path feeds ``run_em``, so a lane's ticked
+        trajectory reproduces the serial result (memoized per plan, like
+        ``execute``'s padding)."""
+        bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
+        return self._pad_plan(plan, bucket, seed)
 
     def clear_cache(self) -> None:
         self._cache.clear()

@@ -2,7 +2,14 @@
 
 from repro.core.pmrf.cliques import CliqueSet, enumerate_maximal_cliques
 from repro.core.pmrf.collectives import LOCAL, ReduceCtx
-from repro.core.pmrf.em import EMConfig, EMResult, run_em, run_em_batched
+from repro.core.pmrf.em import (
+    EMConfig,
+    EMResult,
+    TickState,
+    run_em,
+    run_em_batched,
+    run_em_ticked,
+)
 from repro.core.pmrf.energy import EnergyModel, make_energy_model, pad_model
 from repro.core.pmrf.graph import RegionGraph, build_region_graph
 from repro.core.pmrf.hoods import Hoods, build_hoods, pad_hoods
@@ -22,8 +29,10 @@ __all__ = [
     "ReduceCtx",
     "EMConfig",
     "EMResult",
+    "TickState",
     "run_em",
     "run_em_batched",
+    "run_em_ticked",
     "pad_hoods",
     "pad_model",
     "EnergyModel",

@@ -66,9 +66,19 @@ class ReduceCtx:
         num_segments: int,
         *,
         backend: Optional[str] = None,
+        where: Optional[Array] = None,
     ) -> Array:
         """Touch points 1 & 2: ReduceByKey(Add) over a *global* segment id
-        space.  Local backend-dispatched reduction, psum'd when sharded."""
+        space.  Local backend-dispatched reduction, psum'd when sharded.
+
+        ``where`` masks contributions before the reduction (masked lanes
+        contribute exact zeros) — the ticked serving driver passes its
+        per-lane active flag here so a retired-but-not-yet-replaced lane's
+        stale state never reaches a reduction.  ``where=True`` is a bitwise
+        no-op for live lanes (a select, never an arithmetic rewrite).
+        """
+        if where is not None:
+            values = jnp.where(where, values, jnp.zeros((), values.dtype))
         if self.axis is None:
             return dpp.reduce_by_key(
                 segment_ids, values, num_segments, op="add", backend=backend
@@ -77,19 +87,42 @@ class ReduceCtx:
             segment_ids, values, num_segments, self.axis, op="add", backend=backend
         )
 
-    def vote_scatter(self, values: Array, indices: Array, out_size: int) -> Array:
-        """Touch point 3: Scatter(Add) into the global vertex vote field."""
+    def vote_scatter(
+        self,
+        values: Array,
+        indices: Array,
+        out_size: int,
+        *,
+        where: Optional[Array] = None,
+    ) -> Array:
+        """Touch point 3: Scatter(Add) into the global vertex vote field.
+        ``where`` masks votes exactly like :meth:`segment_sum`'s mask."""
+        if where is not None:
+            values = jnp.where(where, values, jnp.zeros((), values.dtype))
         local = dpp.scatter_(values, indices, out_size, mode="add")
         return self.psum(local)
 
-    def all_converged(self, flags: Array) -> Array:
+    def all_converged(
+        self, flags: Array, *, active: Optional[Array] = None
+    ) -> Array:
         """Touch point 4: the global convergence AND.  Flags are computed
         from psum'd (replicated) energy sums so shards agree by
         construction; the pmin makes the decision robust to any future
-        shard-local convergence input."""
+        shard-local convergence input.
+
+        ``active`` makes the decision *per lane* instead of global: an
+        inactive (retired / empty-slot) lane reports converged immediately,
+        so a pool-wide reduction over lanes is never held hostage by lanes
+        that are no longer running — the masking contract of the ticked
+        serving driver (DESIGN.md §12).
+        """
         if self.axis is None:
-            return jnp.all(flags)
-        return dpp_sharded.global_all_converged(flags, self.axis)
+            conv = jnp.all(flags)
+        else:
+            conv = dpp_sharded.global_all_converged(flags, self.axis)
+        if active is None:
+            return conv
+        return jnp.where(active, conv, jnp.bool_(True))
 
 
 #: The single-device context — the default for ``run_em``.

@@ -24,7 +24,11 @@ fork.
 
 ``run_em_batched`` vmaps the whole driver over a stack of problems padded
 to shared static shapes (DESIGN.md §9) — one trace, one XLA program for an
-entire volume.
+entire volume.  Its lockstep cost model (every lane pays the slowest
+lane's iteration count) is what ``run_em_ticked`` exists to fix: the
+nested loops flattened into a per-lane state machine (:class:`TickState`)
+advanced in fixed-size masked ticks, so a serving engine can retire
+converged lanes and admit new requests between ticks (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -35,6 +39,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dpp
 from repro.core.pmrf import collectives
 from repro.core.pmrf import energy as E
 from repro.core.pmrf.hoods import Hoods
@@ -53,7 +58,9 @@ MODES = ("faithful", "static", "static-pallas")
 # and that the session API's executable cache (repro.api, DESIGN.md §10)
 # performs zero traces on a warm hit.  ``run_em_sharded`` counts traces of
 # the shard_map'd driver (``distributed.py``).
-TRACE_COUNTS = {"run_em": 0, "run_em_batched": 0, "run_em_sharded": 0}
+TRACE_COUNTS = {
+    "run_em": 0, "run_em_batched": 0, "run_em_sharded": 0, "run_em_ticked": 0,
+}
 
 
 def reset_trace_counts() -> None:
@@ -131,10 +138,19 @@ def _map_step(
     mu,
     sigma,
     carry: _MapCarry,
+    *,
+    active: Optional[Array] = None,
 ) -> _MapCarry:
+    """One MAP iteration.  ``active`` is the ticked driver's per-lane mask
+    (DESIGN.md §12): it rides into every keyed-reduction touch point so a
+    masked lane contributes exact zeros, and into the convergence AND so a
+    masked lane reports converged.  ``active=None`` (the while_loop
+    drivers) and ``active=True`` produce bitwise-identical results — the
+    mask is a select, never an arithmetic rewrite."""
     if mode == "static-pallas":
         labels, hood_e = E.map_step_fused(
-            hoods, model, sctx, carry.labels, mu, sigma, backend=backend, ctx=ctx
+            hoods, model, sctx, carry.labels, mu, sigma, backend=backend, ctx=ctx,
+            active=active,
         )
     else:
         # backend selects the keyed-reduction lowering here too; the vote
@@ -142,7 +158,9 @@ def _map_step(
         # neighborhood counts go through the collective context so sharded
         # runs see cross-shard context; per-element mins stay shard-local
         # (elements never straddle shards — only hoods do, via the counts).
-        counts = E.hood_label_counts(hoods, carry.labels, backend=backend, ctx=ctx)
+        counts = E.hood_label_counts(
+            hoods, carry.labels, backend=backend, ctx=ctx, active=active
+        )
         energies = E.label_energies(
             hoods, model, carry.labels, mu, sigma, hood_counts=counts,
             backend=backend,
@@ -151,13 +169,15 @@ def _map_step(
             min_e, arg = E.min_energies_faithful(hoods, energies, backend=backend)
         else:
             min_e, arg = E.min_energies_static(energies)
-        hood_e = E.hood_energy_sums(hoods, min_e, backend=backend, ctx=ctx)
-        labels = E.vote_labels(hoods, arg, hoods.n_regions, ctx=ctx)
+        hood_e = E.hood_energy_sums(
+            hoods, min_e, backend=backend, ctx=ctx, active=active
+        )
+        labels = E.vote_labels(hoods, arg, hoods.n_regions, ctx=ctx, active=active)
     hist = jnp.roll(carry.hist, shift=1, axis=0).at[0].set(hood_e)
     i = carry.i + 1
     # Convergence is decided in the body (not the loop cond) so the
     # collective AND runs in replicated context on every backend.
-    done = ctx.all_converged(_window_converged(hist, i))
+    done = ctx.all_converged(_window_converged(hist, i), active=active)
     return _MapCarry(labels=labels, hist=hist, hood_energy=hood_e, i=i, done=done)
 
 
@@ -306,3 +326,438 @@ def run_em_batched(
         return run_em(h, m, l0, u0, s0, config)
 
     return jax.vmap(one)(hoods, model, labels0, mu0, sigma0)
+
+
+# ---------------------------------------------------------------------------
+# Ticked EM: the continuous-batching serving driver (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# ``run_em_batched`` vmaps the *whole* while_loop, so a stack of problems
+# advances in lockstep until the slowest lane converges — every lane pays
+# the max iteration count (the BENCH_api.json 0.45x inversion).  The ticked
+# driver flattens the nested EM/MAP while_loops into a single-micro-step
+# state machine (:class:`TickState` + :func:`_tick_micro`) and advances a
+# fixed pool of lanes by ``tick_iters`` masked micro-steps per call.
+# Between calls the host retires converged lanes and admits new requests
+# into the freed slots — continuous batching, with no retrace (the pool's
+# shapes never change).  Each lane's trajectory is the exact micro-step
+# sequence ``run_em`` executes, so per-request results are bit-identical
+# to the serial driver (tested).
+
+
+class TickState(NamedTuple):
+    """Per-lane flattened EM/MAP machine state (one slot of the pool).
+
+    The invariant between micro-steps is "inside the MAP loop, about to
+    evaluate its cond": ``labels``/``mu``/``sigma`` are the EM-level
+    parameters, ``map_hist``/``map_i``/``map_done`` the inner-loop carry,
+    ``total_hist``/``em_i``/``map_total`` the outer-loop carry.  ``done``
+    marks a lane whose ``run_em`` while-cond would be false — the micro
+    step freezes such lanes bitwise (and an empty slot is just a lane born
+    with ``done=True``).  Requires ``max_em_iters >= 1`` and
+    ``max_map_iters >= 1`` (both loops always take their first step).
+    """
+
+    labels: Array       # (V+1,) int32
+    mu: Array           # (2,) float32
+    sigma: Array        # (2,) float32
+    map_hist: Array     # (WINDOW+1, n_hoods) inner convergence ring
+    map_i: Array        # () int32 — iterations in the current MAP loop
+    map_done: Array     # () bool  — inner window converged
+    hood_energy: Array  # (n_hoods,) most recent per-hood energy sums
+    total_hist: Array   # (WINDOW+1,) outer convergence ring
+    em_i: Array         # () int32
+    map_total: Array    # () int32 — total inner iterations executed
+    done: Array         # () bool  — lane finished (retire + refill me)
+
+
+def init_tick_lane(labels0: Array, mu0: Array, sigma0: Array, n_hoods: int) -> TickState:
+    """Fresh lane state for one admitted request (mirrors the while_loop
+    drivers' init carries exactly)."""
+    return TickState(
+        labels=jnp.asarray(labels0, jnp.int32),
+        mu=jnp.asarray(mu0, jnp.float32),
+        sigma=jnp.asarray(sigma0, jnp.float32),
+        map_hist=jnp.zeros((WINDOW + 1, n_hoods), jnp.float32),
+        map_i=jnp.int32(0),
+        map_done=jnp.bool_(False),
+        hood_energy=jnp.zeros((n_hoods,), jnp.float32),
+        total_hist=jnp.zeros((WINDOW + 1,), jnp.float32),
+        em_i=jnp.int32(0),
+        map_total=jnp.int32(0),
+        done=jnp.bool_(False),
+    )
+
+
+def blank_tick_state(batch: int, n_hoods: int, n_regions: int) -> TickState:
+    """An all-empty slot pool: every lane ``done`` (masked out) with benign
+    parameter values (sigma=1 so even the discarded masked compute stays
+    NaN-free)."""
+
+    def full(shape, fill, dtype):
+        return jnp.full((batch,) + shape, fill, dtype)
+
+    return TickState(
+        labels=full((n_regions + 1,), 0, jnp.int32),
+        mu=full((2,), 0.0, jnp.float32),
+        sigma=full((2,), 1.0, jnp.float32),
+        map_hist=full((WINDOW + 1, n_hoods), 0.0, jnp.float32),
+        map_i=full((), 0, jnp.int32),
+        map_done=full((), False, jnp.bool_),
+        hood_energy=full((n_hoods,), 0.0, jnp.float32),
+        total_hist=full((WINDOW + 1,), 0.0, jnp.float32),
+        em_i=full((), 0, jnp.int32),
+        map_total=full((), 0, jnp.int32),
+        done=full((), True, jnp.bool_),
+    )
+
+
+def tick_result(state: TickState) -> EMResult:
+    """Read a finished lane (or a whole pool, with leading batch axes) out
+    as the :class:`EMResult` ``run_em`` would have returned."""
+    return EMResult(
+        labels=state.labels,
+        mu=state.mu,
+        sigma=state.sigma,
+        hood_energy=state.hood_energy,
+        total_energy=jnp.sum(state.hood_energy, axis=-1),
+        em_iters=state.em_i,
+        map_iters=state.map_total,
+    )
+
+
+def _tick_micro(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    mode: str,
+    backend: str,
+    sctx: Optional[E.StaticMapContext],
+    ctx: collectives.ReduceCtx,
+    config: EMConfig,
+    s: TickState,
+) -> TickState:
+    """One masked micro-step of the flattened EM/MAP machine (one lane).
+
+    Executes exactly one MAP iteration; when that iteration exits the inner
+    loop (window converged or iteration cap), the EM boundary work — the
+    M-step, outer history/convergence, counter bookkeeping — is applied in
+    the same step via selects, restoring the between-steps invariant.  A
+    ``done`` lane is frozen bitwise.  The select structure never reorders
+    the arithmetic ``run_em`` performs, so an N-micro-step trajectory here
+    equals the serial driver's trajectory bit-for-bit.
+    """
+    active = ~s.done
+    mc = _map_step(
+        hoods, model, mode, backend, sctx, ctx, s.mu, s.sigma,
+        _MapCarry(
+            labels=s.labels, hist=s.map_hist, hood_energy=s.hood_energy,
+            i=s.map_i, done=s.map_done,
+        ),
+        active=active,
+    )
+    # Would the inner while_loop take another step?  (run_em's map cond.)
+    map_exit = ~((mc.i < config.max_map_iters) & ~mc.done)
+
+    # EM boundary work, computed unconditionally and selected in: identical
+    # values to run_em's em_body at the moment the inner loop exits.
+    mu_b, sigma_b = E.update_parameters(model, mc.labels, mode)
+    total = jnp.sum(mc.hood_energy)
+    hist_b = jnp.roll(s.total_hist, 1).at[0].set(total)
+    em_i_b = s.em_i + 1
+    em_done_b = ctx.all_converged(
+        _window_converged(hist_b[:, None], em_i_b)[0], active=active
+    )
+    lane_done_b = ~((em_i_b < config.max_em_iters) & ~em_done_b)
+
+    def sel(at_boundary, inside):
+        return jnp.where(map_exit, at_boundary, inside)
+
+    stepped = TickState(
+        labels=mc.labels,
+        mu=sel(mu_b, s.mu),
+        sigma=sel(sigma_b, s.sigma),
+        map_hist=sel(jnp.zeros_like(s.map_hist), mc.hist),
+        map_i=sel(jnp.int32(0), mc.i),
+        map_done=sel(jnp.bool_(False), mc.done),
+        hood_energy=mc.hood_energy,
+        total_hist=sel(hist_b, s.total_hist),
+        em_i=sel(em_i_b, s.em_i),
+        map_total=sel(s.map_total + mc.i, s.map_total),
+        done=sel(lane_done_b, s.done),
+    )
+    # Freeze retired / empty lanes bitwise (per-leaf select on s.done).
+    return jax.tree.map(lambda new, old: jnp.where(s.done, old, new), stepped, s)
+
+
+class TickVotePlan(NamedTuple):
+    """Loop-invariant vertex-run structure for the pool-form micro-step.
+
+    Per lane, ``perm`` stably sorts the hood elements by vertex id and
+    ``bounds[k]`` is the first sorted position with vertex >= k — so any
+    per-vertex integer-count reduction (the label votes) becomes a gather
+    + cumulative-sum + run-boundary difference instead of a 65k-element
+    scatter.  Both arrays depend only on the neighborhood structure, so
+    they are computed once per admission (``make_vote_plan``), never per
+    micro-step.
+    """
+
+    perm: Array    # (cap,) int32 — stable argsort of vertex within the lane
+    bounds: Array  # (n_regions + 2,) int32 — run boundaries in sorted order
+
+
+@partial(jax.jit, static_argnames=("n_regions",))
+def make_vote_plan(vertex: Array, n_regions: int) -> TickVotePlan:
+    """Build one lane's :class:`TickVotePlan` from its vertex array."""
+    perm = jnp.argsort(vertex, stable=True).astype(jnp.int32)
+    sorted_v = jnp.take_along_axis(vertex, perm, axis=-1)
+    bounds = jnp.searchsorted(
+        sorted_v, jnp.arange(n_regions + 2, dtype=vertex.dtype)
+    ).astype(jnp.int32)
+    return TickVotePlan(perm=perm, bounds=bounds)
+
+
+def _run_sums(values: Array, bounds: Array) -> Array:
+    """Per-run sums of ``values`` (B, cap) along contiguous runs delimited
+    by ``bounds`` (B, K+1): ``out[:, k] = sum(values[:, bounds[k]:bounds[k+1]])``
+    via cumulative sum + boundary difference.
+
+    EXACT (bitwise order-independent) for integer-valued float inputs with
+    totals below 2^24 — which is every use here: label counts, hood sizes,
+    and votes are all 0/1 sums bounded by the lane capacity.  Never use it
+    for real-valued energies (the boundary subtraction would trade the
+    scatter's sequential rounding for catastrophic cancellation).
+    """
+    cum = jnp.cumsum(values, axis=1)
+    cum0 = jnp.concatenate(
+        [jnp.zeros((values.shape[0], 1), values.dtype), cum], axis=1
+    )
+    return jnp.take_along_axis(cum0, bounds[:, 1:], axis=1) - jnp.take_along_axis(
+        cum0, bounds[:, :-1], axis=1
+    )
+
+
+def _pool_tick_micro(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    vote_plan: TickVotePlan,
+    backend: str,
+    config: EMConfig,
+    s: TickState,
+) -> TickState:
+    """One masked micro-step for the WHOLE pool in flat DPP form (static
+    mode's fast path).
+
+    ``jax.vmap`` of the per-lane step lowers the keyed reductions to
+    batched scatters, which XLA:CPU executes far worse than the serial
+    driver's flat ones (measured ~3x per lane-step — the ticked engine
+    would inherit exactly the inversion it exists to fix).  The pool is
+    really just one bigger DPP problem, so this path treats it as one
+    (the paper's own flatten-and-reduce idiom applied to the slot axis),
+    and exploits structure the while_loop drivers get from XLA for free:
+
+    * label-independent quantities (hood sizes, vote denominators) are
+      loop-invariant and left unmasked so XLA hoists them out of the tick
+      loop — masking them would drag them into every micro-step;
+    * integer-valued keyed reductions (label counts, votes) are computed
+      by cumulative-sum + run-boundary difference over their sorted key
+      runs (``hoods.offsets`` for hood ids, :class:`TickVotePlan` for
+      vertex ids) — exact for integer counts, and ~10x cheaper than the
+      equivalent scatter on CPU;
+    * only the real-valued hood ENERGY sums go through the
+      order-preserving flat ``segment_sum`` (lane-offset key space), so
+      their per-segment accumulation order — and with it the bit-identity
+      contract — matches the per-lane step exactly.
+
+    Arithmetic is a transcription of ``_map_step`` (static mode) +
+    ``update_parameters`` + the `_tick_micro` boundary selects onto
+    batched arrays; modes with per-lane sorts or kernel launches
+    (faithful, static-pallas) keep the vmapped lane path.
+    """
+    B = s.labels.shape[0]
+    nh, nr = hoods.n_hoods, hoods.n_regions
+    lane = jnp.arange(B, dtype=jnp.int32)
+    active = ~s.done                                   # (B,)
+    activef = active[:, None]
+    hid_flat = (hoods.hood_id + lane[:, None] * (nh + 1)).reshape(-1)
+
+    def seg_sum_hood(values):                          # (B, cap) -> (B, nh+1)
+        values = jnp.where(activef, values, 0.0)
+        return dpp.reduce_by_key(
+            hid_flat, values.reshape(-1), B * (nh + 1), op="add",
+            backend=backend,
+        ).reshape(B, nh + 1)
+
+    def count_by_hood(values):                         # (B, cap) -> (B, nh+1)
+        # Valid elements sit packed at the lane front in ascending hood_id
+        # runs delimited by hoods.offsets; padding beyond the packed region
+        # only ever lands in the sentinel segment, whose value is never
+        # read (padding elements are weight-0 everywhere downstream).
+        runs = _run_sums(values, hoods.offsets)
+        return jnp.concatenate([runs, jnp.zeros((B, 1), values.dtype)], axis=1)
+
+    def count_by_vertex(values):                       # (B, cap) -> (B, nr+1)
+        gathered = jnp.take_along_axis(values, vote_plan.perm, axis=1)
+        return _run_sums(gathered, vote_plan.bounds)
+
+    # --- one MAP iteration (== _map_step, static mode) -----------------
+    valid = hoods.valid
+    validf = valid.astype(jnp.float32)
+    x = jnp.take_along_axis(s.labels, hoods.vertex, axis=1)
+    xf = x.astype(jnp.float32)
+    n1 = count_by_hood(jnp.where(activef, validf * xf, 0.0))
+    nall = count_by_hood(validf)                       # loop-invariant
+
+    y = jnp.take_along_axis(model.region_mean, hoods.vertex, axis=1)
+    w = jnp.take_along_axis(model.region_weight, hoods.vertex, axis=1) * validf
+    sig = jnp.maximum(s.sigma, model.sigma_min[:, None])   # (B, 2)
+    n1_e = jnp.take_along_axis(n1, hoods.hood_id, axis=1)
+    nall_e = jnp.take_along_axis(nall, hoods.hood_id, axis=1)
+    denom = jnp.maximum(nall_e - 1.0, 1.0)
+    beta = model.beta[:, None]
+
+    def data_term(l):
+        d = y - s.mu[:, l][:, None]
+        sl = sig[:, l][:, None]
+        return w * (d * d / (2.0 * sl * sl) + jnp.log(sl))
+
+    e0 = data_term(0) + beta * jnp.maximum(n1_e - xf, 0.0) / denom * validf
+    e1 = data_term(1) + beta * jnp.maximum(
+        (nall_e - n1_e) - (1.0 - xf), 0.0
+    ) / denom * validf
+
+    min_e = jnp.minimum(e0, e1)
+    arg = (e1 < e0).astype(jnp.int32)      # argmin over {e0, e1}, ties -> 0
+    hood_e = seg_sum_hood(jnp.where(valid, min_e, 0.0))[:, :nh]
+    votes1 = count_by_vertex(
+        jnp.where(activef, jnp.where(valid, arg, 0).astype(jnp.float32), 0.0)
+    )
+    votes_all = count_by_vertex(validf)                # loop-invariant
+    new_labels = (votes1 * 2.0 > votes_all).astype(jnp.int32)
+    new_labels = new_labels.at[:, nr].set(0)
+
+    map_hist = jnp.roll(s.map_hist, shift=1, axis=1).at[:, 0].set(hood_e)
+    map_i = s.map_i + 1
+    deltas = jnp.abs(map_hist[:, :-1] - map_hist[:, 1:])
+    scale = jnp.maximum(jnp.abs(map_hist[:, 0]), 1.0)
+    conv = jnp.all(deltas < CONV_TOL * scale[:, None], axis=1)     # (B, nh)
+    map_done = jnp.where(
+        active,
+        jnp.all(jnp.where(map_i[:, None] > WINDOW, conv, False), axis=1),
+        jnp.bool_(True),
+    )
+    map_exit = ~((map_i < config.max_map_iters) & ~map_done)
+
+    # --- EM boundary (== update_parameters static + em convergence) ----
+    yv, wv = model.region_mean, model.region_weight
+    seg_flat = (new_labels + lane[:, None] * 2).reshape(-1)
+
+    def seg2(vals):                                     # (B, V+1) -> (B, 2)
+        return dpp.reduce_by_key(
+            seg_flat, vals.reshape(-1), B * 2, op="add"
+        ).reshape(B, 2)
+
+    sum_w = seg2(wv)
+    sum_wy = seg2(wv * yv)
+    sum_wyy = seg2(wv * yv * yv)
+    safe_w = jnp.maximum(sum_w, 1e-6)
+    mu_b = sum_wy / safe_w
+    var = jnp.maximum(sum_wyy / safe_w - mu_b * mu_b, 0.0)
+    sigma_b = jnp.maximum(jnp.sqrt(var), model.sigma_min[:, None])
+    dead = sum_w < 1e-3 * jnp.sum(sum_w, axis=1, keepdims=True)
+    mu_b = jnp.where(dead, model.reseed_mu, mu_b)
+    sigma_b = jnp.where(dead, model.reseed_sigma[:, None], sigma_b)
+
+    total = jnp.sum(hood_e, axis=1)
+    hist_b = jnp.roll(s.total_hist, shift=1, axis=1).at[:, 0].set(total)
+    em_i_b = s.em_i + 1
+    em_deltas = jnp.abs(hist_b[:, :-1] - hist_b[:, 1:])
+    em_scale = jnp.maximum(jnp.abs(hist_b[:, 0]), 1.0)
+    em_conv = jnp.all(em_deltas < CONV_TOL * em_scale[:, None], axis=1)
+    em_done_b = jnp.where(
+        active, jnp.where(em_i_b > WINDOW, em_conv, False), jnp.bool_(True)
+    )
+    lane_done_b = ~((em_i_b < config.max_em_iters) & ~em_done_b)
+
+    def sel(at_boundary, inside):
+        cond = map_exit
+        if at_boundary.ndim > 1:
+            cond = cond.reshape((B,) + (1,) * (at_boundary.ndim - 1))
+        return jnp.where(cond, at_boundary, inside)
+
+    stepped = TickState(
+        labels=new_labels,
+        mu=sel(mu_b, s.mu),
+        sigma=sel(sigma_b, s.sigma),
+        map_hist=sel(jnp.zeros_like(s.map_hist), map_hist),
+        map_i=sel(jnp.zeros_like(map_i), map_i),
+        map_done=sel(jnp.zeros_like(map_done), map_done),
+        hood_energy=hood_e,
+        total_hist=sel(hist_b, s.total_hist),
+        em_i=sel(em_i_b, s.em_i),
+        map_total=sel(s.map_total + map_i, s.map_total),
+        done=sel(lane_done_b, s.done),
+    )
+
+    def freeze(new, old):
+        cond = s.done
+        if new.ndim > 1:
+            cond = cond.reshape((B,) + (1,) * (new.ndim - 1))
+        return jnp.where(cond, old, new)
+
+    return jax.tree.map(freeze, stepped, s)
+
+
+@partial(jax.jit, static_argnames=("config", "tick_iters"))
+def run_em_ticked(
+    hoods: Hoods,
+    model: E.EnergyModel,
+    state: TickState,
+    vote_plan: TickVotePlan,
+    config: EMConfig = EMConfig(),
+    tick_iters: int = 8,
+) -> TickState:
+    """Advance a slot pool by ``tick_iters`` masked micro-steps (one tick).
+
+    All inputs carry a leading slot axis (the pool's ``max_batch``); static
+    ``Hoods`` fields must hold the pool's shared bucket values, and
+    ``vote_plan`` the per-lane vertex-run structure (``make_vote_plan``,
+    written at admission alongside the lane's hoods).  Lanes with
+    ``state.done`` are frozen, so the host can retire them and write fresh
+    requests into their slots between ticks without disturbing in-flight
+    lanes — and without retracing, because the pool's shapes never change
+    (``TRACE_COUNTS["run_em_ticked"]``-tested).  The per-lane trajectory
+    reproduces :func:`run_em` exactly in every label-visible output
+    (labels, mu, sigma, iteration counts — tested bitwise); per-hood
+    energies agree to float-reduction tolerance (DESIGN.md §12).
+    """
+    if config.mode not in MODES:
+        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    if config.max_em_iters < 1 or config.max_map_iters < 1:
+        raise ValueError("run_em_ticked requires max_em_iters/max_map_iters >= 1")
+    if tick_iters < 1:
+        raise ValueError(f"tick_iters must be >= 1, got {tick_iters}")
+    TRACE_COUNTS["run_em_ticked"] = TRACE_COUNTS.get("run_em_ticked", 0) + 1
+    kops.resolve_backend(config.backend)  # validate early: raises on unknown
+    mode, backend = config.mode, config.backend
+
+    if mode == "static":
+        # Flat pool-form fast path: one DPP problem, no batched scatters.
+        def body(_, st):
+            return _pool_tick_micro(hoods, model, vote_plan, backend, config, st)
+    else:
+        # faithful / static-pallas: per-lane sorts and kernel launches
+        # don't flatten across the slot axis — vmap the lane step.
+        def lane(h, m, s):
+            sctx = (
+                E.make_static_context(h, m, backend=backend)
+                if mode == "static-pallas"
+                else None
+            )
+            return _tick_micro(
+                h, m, mode, backend, sctx, collectives.LOCAL, config, s
+            )
+
+        def body(_, st):
+            return jax.vmap(lane)(hoods, model, st)
+
+    return jax.lax.fori_loop(0, tick_iters, body, state)

@@ -151,6 +151,7 @@ def hood_label_counts(
     *,
     backend: Optional[str] = None,
     ctx: ReduceCtx = LOCAL,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Per-hood (label-1 count, size) — collective touch point 1.
 
@@ -160,13 +161,19 @@ def hood_label_counts(
     Counts are integer-valued floats, so the psum of per-shard partials is
     *exact* — energies, argmins, and therefore labels are bitwise equal to
     the single-device run.
+
+    ``active`` is the ticked driver's per-lane mask (DESIGN.md §12): a
+    retired lane's counts are exact zeros, a live lane's are bitwise
+    unchanged (the mask is a select, never arithmetic).
     """
     x = labels[hoods.vertex]
     ones = hoods.valid.astype(jnp.float32)
     n1 = ctx.segment_sum(
-        hoods.hood_id, ones * x, hoods.n_hoods + 1, backend=backend
+        hoods.hood_id, ones * x, hoods.n_hoods + 1, backend=backend, where=active
     )
-    nall = ctx.segment_sum(hoods.hood_id, ones, hoods.n_hoods + 1, backend=backend)
+    nall = ctx.segment_sum(
+        hoods.hood_id, ones, hoods.n_hoods + 1, backend=backend, where=active
+    )
     return n1, nall
 
 
@@ -233,17 +240,24 @@ def hood_energy_sums(
     *,
     backend: Optional[str] = None,
     ctx: ReduceCtx = LOCAL,
+    active: Optional[Array] = None,
 ) -> Array:
     """ReduceByKey(Add) of per-element min energies -> per-hood sums
-    (collective touch point 2: psum'd across shards)."""
+    (collective touch point 2: psum'd across shards; ``active`` masks a
+    retired lane's contribution to exact zero, DESIGN.md §12)."""
     return ctx.segment_sum(
         hoods.hood_id, jnp.where(hoods.valid, min_e, 0.0), hoods.n_hoods + 1,
-        backend=backend,
+        backend=backend, where=active,
     )[: hoods.n_hoods]
 
 
 def vote_labels(
-    hoods: Hoods, arg: Array, n_regions: int, *, ctx: ReduceCtx = LOCAL
+    hoods: Hoods,
+    arg: Array,
+    n_regions: int,
+    *,
+    ctx: ReduceCtx = LOCAL,
+    active: Optional[Array] = None,
 ) -> Array:
     """Update Output Labels (paper step 3's Scatter).
 
@@ -254,14 +268,19 @@ def vote_labels(
     votes are integer-valued, so the cross-shard sum is exact and sharded
     label updates are bitwise identical to single-device).
     Returns (V+1,) labels with the sentinel lane forced to 0.
+
+    ``active`` (touch point 3's per-lane mask, DESIGN.md §12) zeroes a
+    retired lane's vote field; the caller discards the resulting all-zero
+    labels, so stale votes can never leak into a live update.
     """
     votes1 = ctx.vote_scatter(
         jnp.where(hoods.valid, arg, 0).astype(jnp.float32),
         hoods.vertex,
         n_regions + 1,
+        where=active,
     )
     votes_all = ctx.vote_scatter(
-        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1
+        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1, where=active
     )
     new = (votes1 * 2.0 > votes_all).astype(jnp.int32)
     return new.at[n_regions].set(0)
@@ -317,6 +336,7 @@ def map_step_fused(
     *,
     backend: Optional[str] = None,
     ctx: ReduceCtx = LOCAL,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """One MAP iteration in static-pallas mode -> (new labels, hood sums).
 
@@ -330,10 +350,16 @@ def map_step_fused(
     collectives stay *outside* the launch: the pre-kernel n1 count is a
     psum'd segment sum, the post-kernel hood sums and vote field are psum'd
     partials.
+
+    ``active`` applies the ticked driver's per-lane mask (DESIGN.md §12) to
+    the kernel's keyed outputs: a retired lane's hood sums and votes are
+    exact zeros, a live lane's are bitwise unchanged.
     """
     x = labels[hoods.vertex]
     xf = x.astype(jnp.float32) * sctx.validf
-    n1 = ctx.segment_sum(hoods.hood_id, xf, hoods.n_hoods + 1, backend=backend)
+    n1 = ctx.segment_sum(
+        hoods.hood_id, xf, hoods.n_hoods + 1, backend=backend, where=active
+    )
     sig = jnp.maximum(sigma, model.sigma_min)
     _, _, hood_e, votes1 = kops.fused_map_step(
         sctx.y,
@@ -351,6 +377,9 @@ def map_step_fused(
         n_vertices=hoods.n_regions + 1,
         backend=backend,
     )
+    if active is not None:
+        hood_e = jnp.where(active, hood_e, 0.0)
+        votes1 = jnp.where(active, votes1, 0.0)
     hood_e = ctx.psum(hood_e)
     votes1 = ctx.psum(votes1)
     new = (votes1 * 2.0 > sctx.votes_all).astype(jnp.int32)

@@ -1,86 +1,119 @@
-"""Serving driver: bring up the batched engine on a reduced config and
-drive a synthetic request stream through it (batched prefill+decode with
-continuous admission), reporting latency/throughput.
+"""Segmentation serving driver: bring up the continuous-batching engine
+(DESIGN.md §12) and drive a synthetic request stream through it, reporting
+per-request latency percentiles and throughput.
+
+``--check`` re-runs every request through the serial ``run_em`` executable
+and exits non-zero on any label mismatch — the CI ``serve-smoke`` gate.
 
 Usage::
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --requests 12 --prompt-len 16 --max-new 24
+    PYTHONPATH=src python -m repro.launch.serve \
+        --requests 12 --shape 64 --grid 8 --max-batch 8 --tick-iters 8
+
+(The LM generation driver this replaced lives at ``repro.launch.serve_lm``.)
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS, get_config
-from repro.models.registry import get_api
-from repro.serving import Request, SamplerConfig, ServingEngine
+from repro import api
+from repro.core import synthetic
+from repro.serving import SegmentationEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="qwen2-1.5b", choices=sorted(ARCHS))
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--shape", type=int, default=64, help="square slice edge")
+    ap.add_argument("--grid", type=int, default=8, help="oversegmentation grid edge")
+    ap.add_argument("--max-batch", type=int, default=8, help="engine slot count")
+    ap.add_argument("--tick-iters", type=int, default=8,
+                    help="masked micro-steps per engine tick")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "xla", "pallas-tpu", "pallas-interpret"))
+    ap.add_argument("--mode", default="static",
+                    choices=("faithful", "static", "static-pallas"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-spread", type=float, default=0.0,
+                    help="stagger request deadlines over this many seconds "
+                         "(exercises deadline-ordered admission)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify every lane result against serial run_em; "
+                         "exit 1 on any label mismatch")
     args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
 
-    cfg = get_config(args.arch).reduced()
-    api = get_api(cfg)
-    params = api.init(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServingEngine(
-        cfg,
-        params,
-        max_batch=args.max_batch,
-        max_seq=args.max_seq,
-        sampler=SamplerConfig(temperature=args.temperature, top_k=args.top_k),
-        seed=args.seed,
+    cfg = api.ExecutionConfig(
+        backend=args.backend, mode=args.mode,
+        overseg_grid=(args.grid, args.grid), capacity_bucket=4096,
     )
+    sess = api.Segmenter(cfg)
 
-    rng = np.random.default_rng(args.seed)
-    extras = {}
-    if cfg.family == "encdec":
-        extras["frames"] = np.zeros((cfg.encoder_seq, cfg.d_model), np.float32)
-    if cfg.family == "vlm":
-        extras["vision_embeds"] = np.zeros(
-            (cfg.vision_patches, cfg.d_model), np.float32
-        )
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
-        engine.submit(
-            Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new,
-                    extras=dict(extras))
-        )
+    vol = synthetic.make_synthetic_volume(
+        seed=args.seed, n_slices=args.requests, shape=(args.shape, args.shape)
+    )
+    imgs = [np.asarray(im) for im in vol.images]
+    plans = [sess.plan(img) for img in imgs]
 
+    engine = SegmentationEngine(
+        sess, max_batch=args.max_batch, tick_iters=args.tick_iters
+    )
     t0 = time.perf_counter()
-    completions = engine.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(c.tokens) for c in completions)
-    print(
-        json.dumps(
-            {
-                "arch": cfg.name,
-                "completed": len(completions),
-                "generated_tokens": toks,
-                "wall_s": round(dt, 3),
-                "tok_per_s": round(toks / dt, 1),
-                "ticks": engine.ticks,
-                "mean_latency_s": round(
-                    float(np.mean([c.latency_s for c in completions])), 3
-                ),
-            }
+    for rid, plan in enumerate(plans):
+        deadline = (
+            None if args.deadline_spread <= 0
+            else args.deadline_spread * rid / max(len(plans) - 1, 1)
         )
-    )
+        engine.submit(plan, rid=rid, seed=args.seed, deadline_s=deadline)
+    completions = engine.run()
+    wall = time.perf_counter() - t0
+
+    lat = np.array([c.latency_s for c in completions])
+    report = {
+        "requests": len(completions),
+        "max_batch": args.max_batch,
+        "tick_iters": args.tick_iters,
+        "bucket": list(engine.bucket),
+        "wall_s": round(wall, 3),
+        "throughput_rps": round(len(completions) / wall, 2),
+        "latency_p50_s": round(float(np.percentile(lat, 50)), 4),
+        "latency_p95_s": round(float(np.percentile(lat, 95)), 4),
+        "mean_em_iters": round(
+            float(np.mean([c.result.em_iters for c in completions])), 2
+        ),
+        **engine.stats(),
+    }
+
+    if args.check:
+        mismatches = []
+        for c in sorted(completions, key=lambda c: c.rid):
+            want = sess.execute(plans[c.rid], seed=args.seed)
+            if not (
+                np.array_equal(c.result.region_labels, want.region_labels)
+                and np.array_equal(c.result.segmentation, want.segmentation)
+                and np.array_equal(c.result.mu, want.mu)
+                and np.array_equal(c.result.sigma, want.sigma)
+                and c.result.em_iters == want.em_iters
+            ):
+                mismatches.append(c.rid)
+        report["check"] = "ok" if not mismatches else f"MISMATCH rids={mismatches}"
+        if mismatches:
+            print(json.dumps(report))
+            print(
+                f"serve --check FAILED: lane results diverged from serial "
+                f"run_em for rids {mismatches}",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+
+    print(json.dumps(report))
 
 
 if __name__ == "__main__":

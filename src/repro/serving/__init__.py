@@ -1,5 +1,40 @@
-"""Serving substrate: samplers (DPP-based top-k), the batched generation
-engine, and cache utilities shared by every architecture family."""
+"""Serving substrate (DESIGN.md §12).
 
-from repro.serving.sampler import SamplerConfig, sample_logits  # noqa: F401
-from repro.serving.engine import ServingEngine, Request, Completion  # noqa: F401
+The primary surface is the **segmentation serving engine**: a fixed pool
+of slots over one bucket-compiled ticked-EM executable, with
+deadline-ordered admission, per-lane convergence masking, and per-request
+latency accounting (``repro.serving.engine``).  The LM token-generation
+engine this scheduling model was first built for lives on in
+``repro.serving.lm`` together with the shared samplers — re-exported here
+lazily (PEP 562), so segmentation-serving consumers never pay the LM
+model zoo's import cost.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    SegCompletion,
+    SegmentationEngine,
+    SegRequest,
+)
+
+_LM_EXPORTS = {"Completion", "Request", "ServingEngine"}
+_SAMPLER_EXPORTS = {"SamplerConfig", "sample_logits"}
+
+__all__ = [
+    "SegCompletion",
+    "SegRequest",
+    "SegmentationEngine",
+    *sorted(_LM_EXPORTS),
+    *sorted(_SAMPLER_EXPORTS),
+]
+
+
+def __getattr__(name):
+    if name in _LM_EXPORTS:
+        from repro.serving import lm
+
+        return getattr(lm, name)
+    if name in _SAMPLER_EXPORTS:
+        from repro.serving import sampler
+
+        return getattr(sampler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,238 +1,332 @@
-"""Slot-based batched serving engine (continuous batching).
+"""Continuous-batching segmentation serving engine (DESIGN.md §12).
 
-The engine owns a fixed pool of ``max_batch`` slots with a shared,
-batched KV/state cache.  Requests are admitted into free slots (their
-prompt prefilled into the slot's cache lanes), decoded together in one
-batched ``decode_step`` per engine tick, and retired on EOS or length.
-New requests are admitted *between* ticks without disturbing in-flight
-slots — the continuous-batching scheduling model of production servers.
+The engine owns a fixed pool of ``max_batch`` slots over ONE
+bucket-compiled ticked executable (``Segmenter.compile_ticked``).  EM for
+every resident request advances in fixed-size **ticks** — one
+``run_em_ticked`` call = ``tick_iters`` masked micro-steps per lane —
+instead of one monolithic per-request ``while_loop``.  Between ticks the
+host retires converged lanes (their ``done`` flag is the only per-tick
+readback) and admits pending requests into the freed slots in deadline
+order, without disturbing in-flight lanes and without ever retracing: the
+pool's shapes are fixed at compile time, admission and retirement are pure
+data writes.
 
-Position-alignment contract: every model family's cache carries a single
-scalar clock ``t`` (write position + causal horizon), so all co-resident
-slots must share the same position.  The scheduler enforces this exactly:
+This is the slot-based continuous-batching scheduling model of production
+LM servers (``repro.serving.lm``) applied to PMRF optimization: the
+lockstep alternative (``run_em_batched``) runs every lane to the *slowest*
+lane's convergence (the BENCH_api.json ``batched_speedup_x: 0.45``
+inversion), while this engine keeps every slot busy with useful work —
+a lane only ever pays its own iterations (plus at most one tick of
+granularity waste).
 
-* when the pool is idle, the next wave admits the pending group with the
-  most requests of equal prompt length;
-* mid-flight, a pending request is admitted the moment its prompt length
-  equals the pool's current position (length-aligned continuous batching).
-
-This keeps every decode mathematically exact (no attention over pad junk)
-while still overlapping requests; a per-slot vector clock (planned) would
-lift the alignment restriction.
-
-All jitted functions compile once per (prompt-length, engine): admission
-reuses the compiled prefill for each distinct length.
+Per-request results are bit-identical to serial ``run_em`` in every
+label-visible output (labels, segmentation, mu, sigma, iteration counts);
+energies agree to float-reduction tolerance (DESIGN.md §12 — the same
+fusion-context caveat as faithful-vs-static mode parity).
 """
 
 from __future__ import annotations
 
+import heapq
+import math
 import time
-from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models.registry import ModelApi, get_api
-from repro.serving.sampler import SamplerConfig, sample_logits
+from repro.api.config import ExecutionConfig
+from repro.api.session import BucketKey, Plan, Segmenter
+from repro.core.pmrf import em as em_mod
+from repro.core.pmrf import pipeline as pipeline_mod
 
-Array = jax.Array
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray             # (S,) int32
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+_INF = math.inf
 
 
 @dataclass
-class Completion:
+class SegRequest:
+    """One queued segmentation request.
+
+    ``deadline_s`` orders admission (earliest first; ``None`` sorts last);
+    it is a *scheduling priority*, not an enforced SLO — the engine reports
+    per-request latency so callers can check deadlines themselves.
+    """
+
     rid: int
-    tokens: np.ndarray             # generated ids (prompt excluded)
-    prompt_len: int
-    latency_s: float
-    finish_reason: str             # "eos" | "length"
+    plan: Plan
+    seed: int = 0
+    deadline_s: Optional[float] = None
+    submitted_s: float = field(default_factory=time.perf_counter)
 
 
-class ServingEngine:
+@dataclass
+class SegCompletion:
+    """A finished request with its result and latency accounting."""
+
+    rid: int
+    result: pipeline_mod.SegmentationResult
+    latency_s: float        # submit -> retire (what the client experiences)
+    queue_s: float          # submit -> admit (time spent waiting for a slot)
+    service_s: float        # admit -> retire (time resident in a lane)
+    ticks_resident: int
+    slot: int
+
+
+class SegmentationEngine:
+    """Fixed-slot continuous-batching server for segmentation requests.
+
+    Lifecycle::
+
+        sess = api.Segmenter(api.ExecutionConfig())
+        eng = SegmentationEngine(sess, max_batch=8, tick_iters=8)
+        for rid, img in enumerate(images):
+            eng.submit(img, rid=rid)
+        completions = eng.run()
+
+    The pool bucket is fixed on first use: pass ``bucket=`` explicitly or
+    let the engine take the elementwise max over the requests pending at
+    first tick.  Later submissions must fit that bucket (padding up is
+    fine; exceeding it raises — recompile a new engine for bigger work).
+    Thread-unsafe by design, like the :class:`Segmenter` it drives.
+    """
+
     def __init__(
         self,
-        cfg: ModelConfig,
-        params: Any,
+        session: Union[Segmenter, ExecutionConfig, None] = None,
         *,
         max_batch: int = 8,
-        max_seq: int = 512,
-        sampler: SamplerConfig = SamplerConfig(temperature=0.0),
-        seed: int = 0,
+        tick_iters: int = 8,
+        bucket: Optional[BucketKey] = None,
     ):
-        self.cfg = cfg
-        self.params = params
-        self.api: ModelApi = get_api(cfg)
+        if session is None:
+            session = Segmenter(ExecutionConfig())
+        elif isinstance(session, ExecutionConfig):
+            session = Segmenter(session)
+        if session.config.shards > 1:
+            raise ValueError(
+                "SegmentationEngine is single-device (the slot axis is the "
+                "parallel axis); use a shards=1 session"
+            )
+        if max_batch < 1 or tick_iters < 1:
+            raise ValueError("max_batch and tick_iters must be >= 1")
+        self.session = session
         self.max_batch = max_batch
-        self.max_seq = max_seq
-        self.sampler = sampler
-        self._key = jax.random.PRNGKey(seed)
-
-        # batched cache for the slot pool
-        self.cache = self.api.init_cache(cfg, max_batch, max_seq)
-        self.pool_t: int = 0                  # shared position clock
-        # per-slot host state
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
-        self.slot_generated: List[List[int]] = [[] for _ in range(max_batch)]
-        self.slot_t0: np.ndarray = np.zeros(max_batch, np.float64)
-        self.last_token = np.zeros((max_batch, 1), np.int32)
-        self.pending: List[Request] = []
-        self.completions: List[Completion] = []
-        self.ticks: int = 0
-
-        self._prefill_cache: Dict[int, Callable] = {}
-        self._decode = jax.jit(
-            lambda p, c, tok: self.api.decode_step(p, c, {"tokens": tok}, cfg)
+        self.tick_iters = tick_iters
+        self.bucket: Optional[BucketKey] = (
+            BucketKey(*bucket) if bucket is not None else None
         )
 
+        self._heap: List[tuple] = []   # (deadline key, seq, SegRequest)
+        self._seq = 0
+        self._auto_rid = 0
+        self._live_rids: set = set()   # queued + resident (dropped on retire)
+        self._exe = None
+        self._hoods = self._model = self._state = self._vote_plan = None
+        self.slot_req: List[Optional[SegRequest]] = [None] * max_batch
+        self._slot_admit_s = np.zeros(max_batch, np.float64)
+        self._slot_admit_tick = np.zeros(max_batch, np.int64)
+        self.completions: List[SegCompletion] = []
+        self.ticks = 0
+        self.admitted = 0
+        self.lane_steps = 0            # occupied-lane micro-steps issued
+
     # ------------------------------------------------------------------
-    # admission
+    # submission (deadline-ordered queue)
     # ------------------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        assert len(req.prompt) < self.max_seq, "prompt exceeds engine max_seq"
-        self.pending.append(req)
+    def submit(
+        self,
+        image_or_plan,
+        *,
+        rid: Optional[int] = None,
+        seed: int = 0,
+        deadline_s: Optional[float] = None,
+    ) -> int:
+        """Enqueue a request (image or prepared :class:`Plan`); returns its
+        rid.  ``deadline_s`` is seconds from now; earlier deadlines are
+        admitted first (FIFO among equals)."""
+        plan = (
+            image_or_plan
+            if isinstance(image_or_plan, Plan)
+            else self.session.plan(image_or_plan)
+        )
+        if self.bucket is not None and not _fits(plan.bucket, self.bucket):
+            raise ValueError(
+                f"request bucket {tuple(plan.bucket)} exceeds the engine's "
+                f"fixed pool bucket {tuple(self.bucket)}"
+            )
+        if rid is None:
+            while self._auto_rid in self._live_rids:
+                self._auto_rid += 1
+            rid = self._auto_rid
+            self._auto_rid += 1
+        elif rid in self._live_rids:
+            raise ValueError(
+                f"rid {rid} is already queued or in flight; completions are "
+                "keyed by rid, so live rids must be unique"
+            )
+        self._live_rids.add(rid)
+        req = SegRequest(
+            rid=rid,
+            plan=plan,
+            seed=seed,
+            deadline_s=(
+                None if deadline_s is None else time.perf_counter() + deadline_s
+            ),
+        )
+        key = _INF if req.deadline_s is None else req.deadline_s
+        heapq.heappush(self._heap, (key, self._seq, req))
+        self._seq += 1
+        return rid
 
-    def _prefill_fn(self, length: int) -> Callable:
-        if length not in self._prefill_cache:
-            def fn(params, batch):
-                return self.api.prefill(
-                    params, batch, self.cfg, max_seq=self.max_seq
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # ------------------------------------------------------------------
+    # pool bring-up, admission, retirement
+    # ------------------------------------------------------------------
+
+    def _ensure_pool(self) -> None:
+        if self._exe is not None:
+            return
+        if self.bucket is None:
+            if not self._heap:
+                raise RuntimeError("cannot size the pool: no bucket, no pending")
+            self.bucket = BucketKey(
+                *(
+                    max(item[2].plan.bucket[d] for item in self._heap)
+                    for d in range(3)
                 )
-            self._prefill_cache[length] = jax.jit(fn)
-        return self._prefill_cache[length]
-
-    def _active(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is not None]
-
-    def _free(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
-
-    def _admit(self) -> None:
-        free = self._free()
-        if not free or not self.pending:
-            return
-        if not self._active():
-            # wave start: the largest equal-length pending group wins
-            groups: Dict[int, List[Request]] = defaultdict(list)
-            for r in self.pending:
-                groups[len(r.prompt)].append(r)
-            length = max(groups, key=lambda k: len(groups[k]))
-            batch_reqs = groups[length][: len(free)]
-            self.pool_t = length
-        else:
-            # mid-flight: only length-aligned prompts may join
-            batch_reqs = [
-                r for r in self.pending if len(r.prompt) == self.pool_t
-            ][: len(free)]
-        if not batch_reqs:
-            return
-        for req in batch_reqs:
-            self.pending.remove(req)
-        for slot, req in zip(free, batch_reqs):
-            self._insert(slot, req)
-
-    def _insert(self, slot: int, req: Request) -> None:
-        s = len(req.prompt)
-        batch = {"tokens": jnp.asarray(np.asarray(req.prompt, np.int32)[None])}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v[None])
-        logits, cache1 = self._prefill_fn(s)(self.params, batch)
-        self.cache = _write_slot(self.cache, cache1, slot)
-        self.slot_req[slot] = req
-        self.slot_generated[slot] = []
-        self.slot_t0[slot] = time.perf_counter()
-        # first generated token comes from the prefill logits
-        self._key, sub = jax.random.split(self._key)
-        tok = int(
-            np.asarray(sample_logits(logits[:, -1], sub, self.sampler))[0]
+            )
+        self._exe = self.session.compile_ticked(
+            self.bucket, batch=self.max_batch, tick_iters=self.tick_iters
         )
-        self._push_token(slot, tok)
+        self._hoods, self._model, self._state, self._vote_plan = (
+            self.session.ticked_pool(self.bucket, batch=self.max_batch)
+        )
+        # One fused dispatch per lane write/read instead of ~30 eager
+        # per-leaf ops (measured ~75ms/admission eager vs ~1ms jitted).
+        # ``slot`` is a traced scalar, so every slot shares one trace;
+        # donating the pools makes the writes in-place where XLA allows.
+        self._write_pools = jax.jit(
+            lambda pools, lanes, slot: jax.tree.map(
+                lambda p, o: p.at[slot].set(o), pools, lanes
+            ),
+            donate_argnums=(0,),
+        )
+        self._read_lane = jax.jit(
+            lambda state, slot: jax.tree.map(lambda x: x[slot], state)
+        )
 
-    def _push_token(self, slot: int, tok: int) -> None:
-        req = self.slot_req[slot]
-        self.slot_generated[slot].append(tok)
-        self.last_token[slot, 0] = tok
-        done_eos = req.eos_id is not None and tok == req.eos_id
-        done_len = len(self.slot_generated[slot]) >= req.max_new_tokens
-        done_seq = self.pool_t + 1 >= self.max_seq - 1
-        if done_eos or done_len or done_seq:
+    def _admit(self) -> int:
+        """Fill free slots from the queue in deadline order.  Pure data
+        writes into the pool (per-slot ``.at[slot].set``) — in-flight lanes
+        are untouched and the compiled tick program never retraces."""
+        admitted = 0
+        now = time.perf_counter()
+        for slot in range(self.max_batch):
+            if not self._heap or self.slot_req[slot] is not None:
+                continue
+            _, _, req = heapq.heappop(self._heap)
+            h1, m1, lab0, mu0, sig0 = self.session.lane_inputs(
+                req.plan, bucket=self.bucket, seed=req.seed
+            )
+            lane = em_mod.init_tick_lane(lab0, mu0, sig0, self.bucket.n_hoods)
+            vplan = em_mod.make_vote_plan(h1.vertex, self.bucket.n_regions)
+            self._hoods, self._model, self._state, self._vote_plan = (
+                self._write_pools(
+                    (self._hoods, self._model, self._state, self._vote_plan),
+                    (h1, m1, lane, vplan),
+                    slot,
+                )
+            )
+            self.slot_req[slot] = req
+            self._slot_admit_s[slot] = now
+            self._slot_admit_tick[slot] = self.ticks
+            self.admitted += 1
+            admitted += 1
+        return admitted
+
+    def _retire(self) -> int:
+        """Drain finished lanes: the only device->host sync per tick is the
+        (max_batch,) ``done`` vector; full lane state is fetched only for
+        lanes actually retiring."""
+        done = np.asarray(self._state.done)
+        retired = 0
+        for slot in range(self.max_batch):
+            req = self.slot_req[slot]
+            if req is None or not done[slot]:
+                continue
+            now = time.perf_counter()
+            res = em_mod.tick_result(self._read_lane(self._state, slot))
+            service_s = now - self._slot_admit_s[slot]
+            result = pipeline_mod._assemble_result(
+                req.plan.problem, res, req.plan.init_seconds, service_s
+            )
             self.completions.append(
-                Completion(
+                SegCompletion(
                     rid=req.rid,
-                    tokens=np.asarray(self.slot_generated[slot], np.int32),
-                    prompt_len=len(req.prompt),
-                    latency_s=time.perf_counter() - self.slot_t0[slot],
-                    finish_reason="eos" if done_eos else "length",
+                    result=result,
+                    latency_s=now - req.submitted_s,
+                    queue_s=self._slot_admit_s[slot] - req.submitted_s,
+                    service_s=service_s,
+                    ticks_resident=int(self.ticks - self._slot_admit_tick[slot]),
+                    slot=slot,
                 )
             )
             self.slot_req[slot] = None
+            self._live_rids.discard(req.rid)
+            retired += 1
+        return retired
 
     # ------------------------------------------------------------------
-    # decode tick
+    # the tick
     # ------------------------------------------------------------------
 
     def step(self) -> int:
-        """Admit pending requests then decode one token for active slots.
-        Returns the number of active slots decoded."""
-        self._admit()
-        active = self._active()
-        if not active:
+        """One engine tick: admit, advance every live lane by
+        ``tick_iters`` micro-steps, retire.  Returns the number of lanes
+        that were advanced (0 = nothing to do)."""
+        if self._heap:
+            self._ensure_pool()
+            self._admit()
+        n_active = self.active()
+        if n_active == 0:
             return 0
-
-        cache = dict(self.cache)
-        cache["t"] = jnp.asarray(self.pool_t, jnp.int32)
-        logits, new_cache = self._decode(
-            self.params, cache, jnp.asarray(self.last_token)
+        self._state = self._exe(
+            self._hoods, self._model, self._state, self._vote_plan
         )
-        self.cache = new_cache
-        self.pool_t += 1
         self.ticks += 1
+        self.lane_steps += n_active * self.tick_iters
+        self._retire()
+        return n_active
 
-        self._key, sub = jax.random.split(self._key)
-        toks = np.asarray(sample_logits(logits[:, -1], sub, self.sampler))
-        for slot in active:
-            self._push_token(slot, int(toks[slot]))
-        return len(active)
-
-    def run(self, max_ticks: int = 10_000) -> List[Completion]:
-        """Drive until all submitted work completes; returns completions."""
-        ticks = 0
-        while (self.pending or self._active()) and ticks < max_ticks:
+    def run(self, max_ticks: int = 1_000_000) -> List[SegCompletion]:
+        """Drive until queue and pool are empty; returns (and clears) the
+        completions, in retirement order."""
+        while self._heap or self.active():
+            if self.ticks >= max_ticks:
+                raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
             self.step()
-            ticks += 1
         done, self.completions = self.completions, []
         return done
 
+    def stats(self) -> dict:
+        """Occupancy/throughput counters for benchmarks and smoke checks."""
+        cap = max(self.ticks * self.max_batch * self.tick_iters, 1)
+        return {
+            "ticks": self.ticks,
+            "tick_iters": self.tick_iters,
+            "max_batch": self.max_batch,
+            "admitted": self.admitted,
+            "lane_steps": self.lane_steps,
+            "occupancy": round(self.lane_steps / cap, 4),
+        }
 
-def _write_slot(batch_cache: Any, one_cache: Any, slot: int) -> Any:
-    """Write a single-request cache (batch dim = 1) into slot ``slot`` of
-    the batched cache.  The batch axis is the first axis whose extent
-    differs between the pool and the single-request cache; scalar leaves
-    (the clock ``t``) are engine-managed and skipped."""
-    def write(pool, one):
-        if pool.ndim == 0:  # scalar t: engine manages it separately
-            return pool
-        for ax in range(pool.ndim):
-            if pool.shape[ax] != one.shape[ax]:
-                break
-        else:
-            # max_batch == 1: shapes coincide, the whole cache is the slot
-            assert slot == 0, (pool.shape, one.shape, slot)
-            return one.astype(pool.dtype)
-        idx = [0] * pool.ndim
-        idx[ax] = slot
-        return jax.lax.dynamic_update_slice(pool, one.astype(pool.dtype), tuple(idx))
 
-    return jax.tree.map(write, batch_cache, one_cache)
+def _fits(inner: BucketKey, outer: BucketKey) -> bool:
+    return all(i <= o for i, o in zip(inner, outer))

@@ -1,0 +1,242 @@
+"""Slot-based batched LM generation engine (continuous batching).
+
+The segmentation serving engine (``repro.serving.engine``) generalizes
+this scheduling model to PMRF requests; this module keeps the LM
+(token-generation) instantiation.
+
+The engine owns a fixed pool of ``max_batch`` slots with a shared,
+batched KV/state cache.  Requests are admitted into free slots (their
+prompt prefilled into the slot's cache lanes), decoded together in one
+batched ``decode_step`` per engine tick, and retired on EOS or length.
+New requests are admitted *between* ticks without disturbing in-flight
+slots — the continuous-batching scheduling model of production servers.
+
+Position-alignment contract: every model family's cache carries a single
+scalar clock ``t`` (write position + causal horizon), so all co-resident
+slots must share the same position.  The scheduler enforces this exactly:
+
+* when the pool is idle, the next wave admits the pending group with the
+  most requests of equal prompt length;
+* mid-flight, a pending request is admitted the moment its prompt length
+  equals the pool's current position (length-aligned continuous batching).
+
+This keeps every decode mathematically exact (no attention over pad junk)
+while still overlapping requests; a per-slot vector clock (planned) would
+lift the alignment restriction.
+
+All jitted functions compile once per (prompt-length, engine): admission
+reuses the compiled prefill for each distinct length.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import ModelApi, get_api
+from repro.serving.sampler import SamplerConfig, sample_logits
+
+Array = jax.Array
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray             # generated ids (prompt excluded)
+    prompt_len: int
+    latency_s: float
+    finish_reason: str             # "eos" | "length"
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 512,
+        sampler: SamplerConfig = SamplerConfig(temperature=0.0),
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.api: ModelApi = get_api(cfg)
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self._key = jax.random.PRNGKey(seed)
+
+        # batched cache for the slot pool
+        self.cache = self.api.init_cache(cfg, max_batch, max_seq)
+        self.pool_t: int = 0                  # shared position clock
+        # per-slot host state
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_generated: List[List[int]] = [[] for _ in range(max_batch)]
+        self.slot_t0: np.ndarray = np.zeros(max_batch, np.float64)
+        self.last_token = np.zeros((max_batch, 1), np.int32)
+        self.pending: List[Request] = []
+        self.completions: List[Completion] = []
+        self.ticks: int = 0
+
+        self._prefill_cache: Dict[int, Callable] = {}
+        self._decode = jax.jit(
+            lambda p, c, tok: self.api.decode_step(p, c, {"tokens": tok}, cfg)
+        )
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) < self.max_seq, "prompt exceeds engine max_seq"
+        self.pending.append(req)
+
+    def _prefill_fn(self, length: int) -> Callable:
+        if length not in self._prefill_cache:
+            def fn(params, batch):
+                return self.api.prefill(
+                    params, batch, self.cfg, max_seq=self.max_seq
+                )
+            self._prefill_cache[length] = jax.jit(fn)
+        return self._prefill_cache[length]
+
+    def _active(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _free(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        free = self._free()
+        if not free or not self.pending:
+            return
+        if not self._active():
+            # wave start: the largest equal-length pending group wins
+            groups: Dict[int, List[Request]] = defaultdict(list)
+            for r in self.pending:
+                groups[len(r.prompt)].append(r)
+            length = max(groups, key=lambda k: len(groups[k]))
+            batch_reqs = groups[length][: len(free)]
+            self.pool_t = length
+        else:
+            # mid-flight: only length-aligned prompts may join
+            batch_reqs = [
+                r for r in self.pending if len(r.prompt) == self.pool_t
+            ][: len(free)]
+        if not batch_reqs:
+            return
+        for req in batch_reqs:
+            self.pending.remove(req)
+        for slot, req in zip(free, batch_reqs):
+            self._insert(slot, req)
+
+    def _insert(self, slot: int, req: Request) -> None:
+        s = len(req.prompt)
+        batch = {"tokens": jnp.asarray(np.asarray(req.prompt, np.int32)[None])}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v[None])
+        logits, cache1 = self._prefill_fn(s)(self.params, batch)
+        self.cache = _write_slot(self.cache, cache1, slot)
+        self.slot_req[slot] = req
+        self.slot_generated[slot] = []
+        self.slot_t0[slot] = time.perf_counter()
+        # first generated token comes from the prefill logits
+        self._key, sub = jax.random.split(self._key)
+        tok = int(
+            np.asarray(sample_logits(logits[:, -1], sub, self.sampler))[0]
+        )
+        self._push_token(slot, tok)
+
+    def _push_token(self, slot: int, tok: int) -> None:
+        req = self.slot_req[slot]
+        self.slot_generated[slot].append(tok)
+        self.last_token[slot, 0] = tok
+        done_eos = req.eos_id is not None and tok == req.eos_id
+        done_len = len(self.slot_generated[slot]) >= req.max_new_tokens
+        done_seq = self.pool_t + 1 >= self.max_seq - 1
+        if done_eos or done_len or done_seq:
+            self.completions.append(
+                Completion(
+                    rid=req.rid,
+                    tokens=np.asarray(self.slot_generated[slot], np.int32),
+                    prompt_len=len(req.prompt),
+                    latency_s=time.perf_counter() - self.slot_t0[slot],
+                    finish_reason="eos" if done_eos else "length",
+                )
+            )
+            self.slot_req[slot] = None
+
+    # ------------------------------------------------------------------
+    # decode tick
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit pending requests then decode one token for active slots.
+        Returns the number of active slots decoded."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return 0
+
+        cache = dict(self.cache)
+        cache["t"] = jnp.asarray(self.pool_t, jnp.int32)
+        logits, new_cache = self._decode(
+            self.params, cache, jnp.asarray(self.last_token)
+        )
+        self.cache = new_cache
+        self.pool_t += 1
+        self.ticks += 1
+
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(sample_logits(logits[:, -1], sub, self.sampler))
+        for slot in active:
+            self._push_token(slot, int(toks[slot]))
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> List[Completion]:
+        """Drive until all submitted work completes; returns completions."""
+        ticks = 0
+        while (self.pending or self._active()) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        done, self.completions = self.completions, []
+        return done
+
+
+def _write_slot(batch_cache: Any, one_cache: Any, slot: int) -> Any:
+    """Write a single-request cache (batch dim = 1) into slot ``slot`` of
+    the batched cache.  The batch axis is the first axis whose extent
+    differs between the pool and the single-request cache; scalar leaves
+    (the clock ``t``) are engine-managed and skipped."""
+    def write(pool, one):
+        if pool.ndim == 0:  # scalar t: engine manages it separately
+            return pool
+        for ax in range(pool.ndim):
+            if pool.shape[ax] != one.shape[ax]:
+                break
+        else:
+            # max_batch == 1: shapes coincide, the whole cache is the slot
+            assert slot == 0, (pool.shape, one.shape, slot)
+            return one.astype(pool.dtype)
+        idx = [0] * pool.ndim
+        idx[ax] = slot
+        return jax.lax.dynamic_update_slice(pool, one.astype(pool.dtype), tuple(idx))
+
+    return jax.tree.map(write, batch_cache, one_cache)

@@ -1,0 +1,25 @@
+"""Shared test fixtures.
+
+The trace-count assertions (``em.TRACE_COUNTS``) and the module-level
+session registry (``repro.api``) are process-global state; before this
+fixture existed, tests that asserted absolute trace counts or cold caches
+depended on manual resets *and on test order*.  The autouse fixture gives
+every test a cold session registry and zeroed trace counters.
+
+It deliberately does NOT call ``jax.clear_caches()``: the global jit cache
+is keyed by shapes and configs, so leaving it warm is order-independent
+for correctness and keeps the suite's runtime sane.  Tests that need a
+truly cold jit cache (cold-compile timing) clear it themselves.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_global_session_state():
+    from repro import api
+    from repro.core.pmrf import em as em_mod
+
+    api.reset_sessions()
+    em_mod.reset_trace_counts()
+    yield

@@ -12,6 +12,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess / full-EM parity runs
+
 RUNNER = Path(__file__).parent / "_distributed_runner.py"
 SRC = str(Path(__file__).parent.parent / "src")
 

@@ -136,6 +136,7 @@ def test_hoods_structure():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_faithful_and_static_modes_agree():
     img, _ = _tiny_problem(seed=3)
     problem = initialize(img, overseg_grid=(6, 6))
@@ -167,6 +168,7 @@ def test_min_energy_modes_agree_elementwise():
     np.testing.assert_array_equal(np.asarray(a_s)[valid], np.asarray(a_f)[valid])
 
 
+@pytest.mark.slow
 def test_energy_decreases_across_em():
     """MAP label updates must not increase the total energy (given fixed
     params the vote/min step minimizes elementwise energy)."""
@@ -178,6 +180,7 @@ def test_energy_decreases_across_em():
     assert float(res2.total_energy) <= float(res.total_energy) * 1.05
 
 
+@pytest.mark.slow
 def test_segmentation_accuracy_synthetic():
     """Paper §4.2.2: high precision/recall/accuracy vs. ground truth on the
     synthetic porous-media data (paper: 99.3/98.3/98.6 on full-res; we use a
@@ -192,6 +195,7 @@ def test_segmentation_accuracy_synthetic():
     assert m.recall > 0.85, m
 
 
+@pytest.mark.slow
 def test_mrf_beats_threshold_baseline():
     vol = synthetic.make_synthetic_volume(
         seed=2, n_slices=1, shape=(96, 96), gaussian_sigma=70.0
@@ -204,6 +208,7 @@ def test_mrf_beats_threshold_baseline():
     assert m_mrf.accuracy > m_thr.accuracy, (m_mrf, m_thr)
 
 
+@pytest.mark.slow
 def test_em_converges_within_paper_budget():
     img, _ = _tiny_problem(seed=4)
     res = segment_image(img, overseg_grid=(6, 6), seed=0)

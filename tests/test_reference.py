@@ -11,6 +11,8 @@ from repro.core import synthetic
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import pipeline, reference
 
+pytestmark = pytest.mark.slow  # multi-device subprocess / full-EM parity runs
+
 
 @pytest.fixture(scope="module")
 def problem():

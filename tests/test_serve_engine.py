@@ -1,0 +1,165 @@
+"""Serving-engine tests: ticked masked EM vs serial run_em.
+
+The acceptance bar of the serving PR (DESIGN.md §12): on a stack of
+problems with deliberately mixed convergence iteration counts — the exact
+case that produced BENCH_api.json's 0.45x lockstep inversion — every
+request served through the continuous-batching engine must reproduce the
+serial ``run_em`` result bit-for-bit in every label-visible output
+(labels, segmentation, mu, sigma, em/map iteration counts; energies to
+float-reduction tolerance), and admission/retirement across ticks must
+never retrace the compiled tick program.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import api
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+from repro.serving import SegmentationEngine
+
+pytestmark = pytest.mark.slow  # full-EM runs: in the tier-1 slow bucket
+
+
+def _session(**overrides):
+    kwargs = dict(overseg_grid=(6, 6), capacity_bucket=2048)
+    kwargs.update(overrides)
+    return api.Segmenter(api.ExecutionConfig(**kwargs))
+
+
+def _mixed_plans(sess, n=7, shape=(44, 44), seed=5):
+    """Plans whose EM iteration counts differ (mixed-convergence premise —
+    asserted, not assumed)."""
+    vol = synthetic.make_synthetic_volume(seed=seed, n_slices=n, shape=shape)
+    return [sess.plan(np.asarray(im)) for im in vol.images]
+
+
+def _assert_matches_serial(completion, want):
+    got = completion.result
+    np.testing.assert_array_equal(got.region_labels, want.region_labels)
+    np.testing.assert_array_equal(got.segmentation, want.segmentation)
+    np.testing.assert_array_equal(got.mu, want.mu)
+    np.testing.assert_array_equal(got.sigma, want.sigma)
+    assert got.em_iters == want.em_iters
+    assert got.map_iters == want.map_iters
+    # Energies: fusion-context float noise only (DESIGN.md §12).
+    np.testing.assert_allclose(
+        got.total_energy, want.total_energy, rtol=1e-4
+    )
+
+
+def test_ticked_engine_bit_identical_on_mixed_convergence():
+    sess = _session()
+    plans = _mixed_plans(sess)
+    serial = [sess.execute(p, seed=0) for p in plans]
+    assert len({r.em_iters for r in serial}) > 1, "premise: mixed convergence"
+
+    engine = SegmentationEngine(sess, max_batch=3, tick_iters=4)
+    for rid, plan in enumerate(plans):
+        engine.submit(plan, rid=rid, seed=0)
+    completions = engine.run()
+
+    assert sorted(c.rid for c in completions) == list(range(len(plans)))
+    for c in completions:
+        _assert_matches_serial(c, serial[c.rid])
+    # more requests than slots: slots were reused across waves
+    assert engine.stats()["admitted"] == len(plans)
+    assert engine.ticks > 0 and engine.stats()["occupancy"] > 0.5
+
+
+def test_admission_and_retirement_never_retrace():
+    sess = _session()
+    plans = _mixed_plans(sess, n=5)
+    engine = SegmentationEngine(sess, max_batch=2, tick_iters=3)
+    for rid, plan in enumerate(plans):
+        engine.submit(plan, rid=rid)
+    before = dict(em_mod.TRACE_COUNTS)
+    completions = engine.run()
+    # 5 requests / 2 slots forces several admission+retirement waves, all
+    # through ONE trace of the tick program (and zero run_em traces).
+    assert em_mod.TRACE_COUNTS["run_em_ticked"] == before["run_em_ticked"] + 1
+    assert em_mod.TRACE_COUNTS["run_em"] == before["run_em"]
+    assert len(completions) == 5
+    # a second engine over the same session hits the executable cache cold-
+    # trace-free (warm AOT executable, zero new traces)
+    before = dict(em_mod.TRACE_COUNTS)
+    engine2 = SegmentationEngine(
+        sess, max_batch=2, tick_iters=3, bucket=engine.bucket
+    )
+    engine2.submit(plans[0], rid=0)
+    engine2.run()
+    assert em_mod.TRACE_COUNTS == before
+
+
+def test_run_em_ticked_driver_matches_run_em_directly():
+    """Driver-level identity, no engine: tick the machine to completion on
+    one lane and compare the full EMResult against run_em."""
+    sess = _session()
+    plan = _mixed_plans(sess, n=1)[0]
+    h, m, l0, mu0, s0 = sess.lane_inputs(plan)
+    cfg = sess.config.em_config()
+    ref = em_mod.run_em(h, m, l0, mu0, s0, cfg)
+
+    batched = lambda t: jax.tree.map(lambda x: x[None], t)  # noqa: E731
+    hoods_b, model_b = batched(h), batched(m)
+    vplan_b = batched(em_mod.make_vote_plan(h.vertex, h.n_regions))
+    state = batched(em_mod.init_tick_lane(l0, mu0, s0, h.n_hoods))
+    ticks = 0
+    while not bool(np.asarray(state.done)[0]):
+        state = em_mod.run_em_ticked(hoods_b, model_b, state, vplan_b, cfg, 7)
+        ticks += 1
+        assert ticks <= cfg.max_em_iters * cfg.max_map_iters
+    got = em_mod.tick_result(jax.tree.map(lambda x: x[0], state))
+    np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(got.labels))
+    np.testing.assert_array_equal(np.asarray(ref.mu), np.asarray(got.mu))
+    np.testing.assert_array_equal(np.asarray(ref.sigma), np.asarray(got.sigma))
+    assert int(ref.em_iters) == int(got.em_iters)
+    assert int(ref.map_iters) == int(got.map_iters)
+    np.testing.assert_allclose(
+        np.asarray(ref.hood_energy), np.asarray(got.hood_energy), rtol=1e-4
+    )
+
+
+def test_ticked_vmap_path_matches_serial_faithful_mode():
+    """The non-static modes go through the vmapped lane step — same
+    bit-identity contract."""
+    sess = _session(mode="faithful")
+    plan = _mixed_plans(sess, n=1, seed=9)[0]
+    want = sess.execute(plan, seed=0)
+
+    engine = SegmentationEngine(sess, max_batch=2, tick_iters=4)
+    engine.submit(plan, rid=0, seed=0)
+    (completion,) = engine.run()
+    _assert_matches_serial(completion, want)
+
+
+def test_deadline_ordered_admission():
+    sess = _session()
+    plans = _mixed_plans(sess, n=3)
+    # one slot: admission order == completion order
+    engine = SegmentationEngine(sess, max_batch=1, tick_iters=8)
+    engine.submit(plans[0], rid=0, deadline_s=30.0)
+    engine.submit(plans[1], rid=1)                 # no deadline: last
+    engine.submit(plans[2], rid=2, deadline_s=1.0)  # tightest: first
+    completions = engine.run()
+    assert [c.rid for c in completions] == [2, 0, 1]
+    # latency accounting is consistent: queue + service == latency
+    for c in completions:
+        assert c.latency_s == pytest.approx(c.queue_s + c.service_s, abs=1e-3)
+        assert c.ticks_resident >= 1
+
+
+def test_engine_rejects_oversized_and_sharded():
+    sess = _session()
+    plans = _mixed_plans(sess, n=1)
+    engine = SegmentationEngine(sess, max_batch=1, bucket=api.BucketKey(64, 8, 8))
+    with pytest.raises(ValueError, match="exceeds the engine's fixed pool"):
+        engine.submit(plans[0])
+    with pytest.raises(ValueError, match="single-device"):
+        SegmentationEngine(api.ExecutionConfig(shards=2))
+    with pytest.raises(ValueError, match="single-device"):
+        api.Segmenter(api.ExecutionConfig(shards=2)).compile_ticked(
+            api.BucketKey(64, 8, 8), batch=2
+        )

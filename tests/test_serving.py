@@ -141,13 +141,17 @@ def test_engine_eos_stops_early(small_model):
     e.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
     (ref,) = e.run()
     eos = int(ref.tokens[2])  # pretend the 3rd generated token is EOS
+    # the same token may also appear earlier in the greedy sequence (the
+    # random-init model repeats tokens readily): the engine must stop at
+    # the FIRST occurrence, wherever that is
+    expect = int(np.flatnonzero(np.asarray(ref.tokens) == eos)[0]) + 1
 
     e2 = ServingEngine(cfg, params, max_batch=1, max_seq=32,
                        sampler=SamplerConfig(temperature=0.0))
     e2.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=eos))
     (comp,) = e2.run()
     assert comp.finish_reason == "eos"
-    assert len(comp.tokens) == 3
+    assert len(comp.tokens) == expect <= 3
 
 
 @pytest.mark.parametrize("arch", ["mamba2-130m", "zamba2-2.7b", "deepseek-v2-lite-16b"])
