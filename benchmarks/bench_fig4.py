@@ -28,7 +28,7 @@ def _one_map_iteration(hoods, model, labels, mu, sigma, mode: str):
     else:
         min_e, arg = E.min_energies_static(energies)
     hood_e = E.hood_energy_sums(hoods, min_e)
-    labels = E.vote_labels(hoods, arg, hoods.n_regions)
+    labels = E.vote_labels(hoods, arg, hoods.n_regions, int(mu.shape[0]))
     mu, sigma = E.update_parameters(model, labels, mode)
     return labels, mu, sigma, hood_e
 

@@ -4,7 +4,11 @@ Runs the three execution modes (faithful / static / static-pallas) on a
 fixed synthetic image built from ``configs/pmrf_paper.py`` and emits
 ``BENCH_pmrf.json`` so the perf trajectory of the MAP hot loop is tracked
 across PRs.  Also reports the batched-vs-loop slice-stack timing through
-the session API (``Segmenter.segment_stack``, DESIGN.md §9/§10).
+the session API (``Segmenter.segment_stack``, DESIGN.md §9/§10) — the
+forced-batch path AND the ``batch="auto"`` policy path, which ``--check``
+gates (auto must never lose to the loop: the lockstep-batched inversion on
+CPU is a known regression that auto is required to route around) — and a
+K-sweep (K in {2, 3, 5, 8}) of the K-ary static mode (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import print_csv, time_fn
 from repro import api
 from repro.configs.pmrf_paper import CONFIG
@@ -25,6 +30,7 @@ from repro.core.pmrf import pipeline
 from repro.kernels import ops as kops
 
 MODES = ("faithful", "static", "static-pallas")
+K_SWEEP = (2, 3, 5, 8)
 OUT_PATH = pathlib.Path("BENCH_pmrf.json")
 
 
@@ -68,6 +74,42 @@ def run() -> dict:
     sess = api.Segmenter(api.ExecutionConfig(overseg_grid=(16, 16)))
     _, loop_s = sess.segment_stack(imgs, batch="never")
     _, batch_s = sess.segment_stack(imgs, batch="always")
+    _, auto_s = sess.segment_stack(imgs, batch="auto")
+
+    # K-sweep: the K-ary static mode on a K-phase volume of the same shape
+    # (DESIGN.md §13).  Tracks how the widened key spaces scale the MAP hot
+    # loop — counts/votes key spaces and the vote argmax grow by K, the
+    # energy map by K lanes.
+    k_sweep = {}
+    for k in K_SWEEP:
+        kvol = synthetic.make_kary_volume(
+            seed=0, n_slices=1, shape=shape, n_phases=k
+        )
+        kprob = pipeline.initialize(
+            np.asarray(kvol.images[0]), overseg_grid=(16, 16),
+            beta=CONFIG.beta, n_labels=k,
+        )
+        kl0, km0, ks0 = em_mod.quantile_init(
+            kprob.graph.region_mean, kprob.graph.n_regions, k
+        )
+        kcfg = em_mod.EMConfig(
+            max_em_iters=CONFIG.max_em_iters, max_map_iters=CONFIG.max_map_iters,
+            mode="static", beta=CONFIG.beta, backend=CONFIG.backend,
+        )
+        t = time_fn(
+            lambda kcfg=kcfg, kprob=kprob, kl0=kl0, km0=km0, ks0=ks0: em_mod.run_em(
+                kprob.hoods, kprob.model, kl0, km0, ks0, kcfg
+            ),
+            repeats=3,
+        )
+        res = em_mod.run_em(kprob.hoods, kprob.model, kl0, km0, ks0, kcfg)
+        k_sweep[str(k)] = {
+            "optimize_seconds": round(t, 5),
+            "em_iters": int(res.em_iters),
+            "labels_in_use": int(
+                len(np.unique(np.asarray(res.labels)[: kprob.graph.n_regions]))
+            ),
+        }
 
     return {
         "config": CONFIG.name,
@@ -81,7 +123,9 @@ def run() -> dict:
             "slices": len(imgs),
             "loop_mean_optimize_seconds": round(loop_s, 5),
             "batched_mean_optimize_seconds": round(batch_s, 5),
+            "auto_mean_optimize_seconds": round(auto_s, 5),
         },
+        "k_sweep": k_sweep,
     }
 
 
@@ -100,10 +144,17 @@ def main() -> None:
     )
     sv = result["segment_volume"]
     print_csv(
-        "segment_volume loop vs batched (mean optimize seconds/slice)",
-        ["slices", "loop_s", "batched_s"],
+        "segment_volume loop vs batched vs auto (mean optimize seconds/slice)",
+        ["slices", "loop_s", "batched_s", "auto_s"],
         [(sv["slices"], sv["loop_mean_optimize_seconds"],
-          sv["batched_mean_optimize_seconds"])],
+          sv["batched_mean_optimize_seconds"], sv["auto_mean_optimize_seconds"])],
+    )
+    ks = result["k_sweep"]
+    print_csv(
+        "K-sweep: K-ary static-mode optimize seconds (DESIGN.md §13)",
+        ["K", "optimize_s", "em_iters", "labels_in_use"],
+        [(k, d["optimize_seconds"], d["em_iters"], d["labels_in_use"])
+         for k, d in ks.items()],
     )
     # Exact cross-mode label equality is only claimed on the XLA/CPU path
     # (energy.py); on TPU the one-hot dot accumulation order can perturb
@@ -111,6 +162,25 @@ def main() -> None:
     # enforce here.
     if result["backend"] == "xla":
         assert all(d["labels_match_faithful"] for d in result["modes"].values())
+    if common.CHECK:
+        # The batched-path regression gate (`benchmarks/run.py --check`):
+        # forcing batch="always" is known to LOSE on CPU (vmapped lockstep
+        # while_loops — the BENCH_pmrf 0.47s-vs-0.28s inversion), so the
+        # policy contract is on batch="auto": it must route around the
+        # inversion and never run slower than the serial loop (15% noise
+        # margin; on accelerators auto picks the batched path and the same
+        # bound then asserts that batching actually pays).
+        loop_s, auto_s = (
+            sv["loop_mean_optimize_seconds"], sv["auto_mean_optimize_seconds"]
+        )
+        assert auto_s <= loop_s * 1.15, (
+            f"segment_stack(batch='auto') regressed: auto {auto_s}s vs loop "
+            f"{loop_s}s — the auto policy must never lose to the serial loop"
+        )
+        assert all(d["labels_in_use"] == int(k) for k, d in ks.items()), (
+            "K-sweep: some label never captured a region — K-ary EM "
+            "degenerated"
+        )
 
 
 if __name__ == "__main__":

@@ -3,6 +3,11 @@
 from __future__ import annotations
 
 import time
+
+#: Set by ``benchmarks.run --check``: sections with regression gates turn
+#: their reported comparisons into hard assertions (e.g. bench_pmrf fails
+#: when the batch="auto" policy path is slower than the serial loop).
+CHECK = False
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Tuple
 

@@ -18,6 +18,11 @@ One section per paper table/figure + the framework benches:
     roofline            (arch x shape) roofline table from the dry-run
 
 Pass section names to run a subset: ``python -m benchmarks.run table1 fig3``.
+
+``--check`` turns each section's regression gates into hard assertions
+(``benchmarks.common.CHECK``): a gated comparison that regresses — e.g. the
+``segment_volume`` batch="auto" path running slower than the serial loop
+(bench_pmrf) — fails the run instead of only being reported.
 """
 
 from __future__ import annotations
@@ -33,7 +38,13 @@ SECTIONS = (
 
 
 def main() -> None:
-    want = sys.argv[1:] or list(SECTIONS)
+    args = sys.argv[1:]
+    if "--check" in args:
+        from benchmarks import common
+
+        common.CHECK = True
+        args = [a for a in args if a != "--check"]
+    want = args or list(SECTIONS)
     failures = []
     for name in want:
         assert name in SECTIONS, f"unknown section {name!r}; have {SECTIONS}"

@@ -54,6 +54,15 @@ class ExecutionConfig:
     backend: str = "auto"   # auto | xla | pallas | pallas-tpu | pallas-interpret
     mode: str = "static"    # faithful | static | static-pallas
 
+    # --- label space (K-ary multi-label segmentation, DESIGN.md §13) ----
+    # n_labels sizes every label-indexed array the session plans/compiles
+    # (model reseed quantiles, mu/sigma, tick pools) and widens the
+    # compound key spaces by a factor of K.  It is part of
+    # `ExecutableKey`, so a K=2 compile never aliases a K>2 one in the
+    # LRU cache.  K=2 is the paper's binary PMRF, bit-identical to the
+    # historical binary implementation.
+    n_labels: int = 2
+
     # --- sharding (multi-device, DESIGN.md §11) ------------------------
     # shards > 1 block-partitions hood elements over `mesh_axis` of a
     # `shards`-device mesh and routes execution through the sharded
@@ -92,6 +101,8 @@ class ExecutionConfig:
                 f"unknown backend {self.backend!r}; have "
                 f"{('auto', 'pallas') + kops.BACKENDS}"
             )
+        if self.n_labels < 2:
+            raise ValueError(f"n_labels must be >= 2, got {self.n_labels}")
         if self.capacity_bucket < 1 or self.segment_bucket < 1:
             raise ValueError("bucket granularities must be >= 1")
         if self.max_cached_executables < 1:

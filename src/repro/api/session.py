@@ -69,7 +69,9 @@ class ExecutableKey(NamedTuple):
     per-call micro-step chunk for a ticked serving executable
     (:meth:`Segmenter.compile_ticked`, DESIGN.md §12) — a ticked program
     consumes pool state, not initial parameters, so it never aliases a
-    ``run_em`` compile.
+    ``run_em`` compile.  ``n_labels`` is the label count K (DESIGN.md §13):
+    every label-indexed input shape depends on it, so a K=2 compile must
+    never alias a K>2 one.
     """
 
     capacity: int
@@ -82,6 +84,7 @@ class ExecutableKey(NamedTuple):
     batch: Optional[int]
     shards: int
     tick_iters: Optional[int] = None
+    n_labels: int = 2
 
 
 @dataclass
@@ -135,7 +138,9 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _abstract_inputs(bucket: BucketKey, batch: Optional[int], shards: int = 1):
+def _abstract_inputs(
+    bucket: BucketKey, batch: Optional[int], shards: int = 1, n_labels: int = 2
+):
     """ShapeDtypeStruct pytrees matching a bucket's padded runtime inputs.
 
     Must mirror exactly what ``_pad_plan`` produces (shapes, dtypes, and
@@ -143,6 +148,7 @@ def _abstract_inputs(bucket: BucketKey, batch: Optional[int], shards: int = 1):
     override) or the AOT executable will reject its own inputs.  For a
     sharded program the element capacity is rounded up so it divides into
     ``shards`` equal blocks (mirroring ``distributed.partition_hoods``).
+    ``n_labels`` sizes the label-indexed leaves (DESIGN.md §13).
     """
     cap, nh, nr = bucket
     if shards > 1:
@@ -172,16 +178,16 @@ def _abstract_inputs(bucket: BucketKey, batch: Optional[int], shards: int = 1):
         region_weight=arr((nr + 1,), jnp.float32),
         beta=arr((), jnp.float32),
         sigma_min=arr((), jnp.float32),
-        reseed_mu=arr((2,), jnp.float32),
+        reseed_mu=arr((n_labels,), jnp.float32),
         reseed_sigma=arr((), jnp.float32),
     )
     labels0 = arr((nr + 1,), jnp.int32)
-    mu0 = arr((2,), jnp.float32)
-    sigma0 = arr((2,), jnp.float32)
+    mu0 = arr((n_labels,), jnp.float32)
+    sigma0 = arr((n_labels,), jnp.float32)
     return hoods, model, labels0, mu0, sigma0
 
 
-def _abstract_tick_state(bucket: BucketKey, batch: int):
+def _abstract_tick_state(bucket: BucketKey, batch: int, n_labels: int = 2):
     """ShapeDtypeStruct pytree for a ticked pool's state (mirrors
     ``em.blank_tick_state`` exactly — the AOT program must accept the
     engine's live pool)."""
@@ -193,8 +199,8 @@ def _abstract_tick_state(bucket: BucketKey, batch: int):
 
     return em_mod.TickState(
         labels=arr((nr + 1,), jnp.int32),
-        mu=arr((2,), jnp.float32),
-        sigma=arr((2,), jnp.float32),
+        mu=arr((n_labels,), jnp.float32),
+        sigma=arr((n_labels,), jnp.float32),
         map_hist=arr((w, nh), jnp.float32),
         map_i=arr((), jnp.int32),
         map_done=arr((), jnp.bool_),
@@ -249,6 +255,7 @@ class Segmenter:
             overseg_iters=self.config.overseg_iters,
             beta=self.config.beta,
             sigma_min=self.config.sigma_min,
+            n_labels=self.config.n_labels,
             oversegmentation=oversegmentation,
         )
         init_s = time.perf_counter() - t0
@@ -278,6 +285,7 @@ class Segmenter:
             batch=batch,
             shards=c.shards,
             tick_iters=tick_iters,
+            n_labels=c.n_labels,
         )
 
     def mesh(self) -> Mesh:
@@ -327,7 +335,7 @@ class Segmenter:
 
         self.stats.misses += 1
         em_config = self.config.em_config()
-        abstract = _abstract_inputs(bucket, batch, shards)
+        abstract = _abstract_inputs(bucket, batch, shards, self.config.n_labels)
         t0 = time.perf_counter()
         if shards > 1:
             compiled = distributed_mod.run_em_sharded.lower(
@@ -383,8 +391,9 @@ class Segmenter:
 
         self.stats.misses += 1
         em_config = self.config.em_config()
-        hoods_abs, model_abs, *_ = _abstract_inputs(bucket, batch)
-        state_abs = _abstract_tick_state(bucket, batch)
+        n_labels = self.config.n_labels
+        hoods_abs, model_abs, *_ = _abstract_inputs(bucket, batch, 1, n_labels)
+        state_abs = _abstract_tick_state(bucket, batch, n_labels)
         plan_abs = _abstract_vote_plan(bucket, batch)
         t0 = time.perf_counter()
         compiled = em_mod.run_em_ticked.lower(
@@ -410,6 +419,7 @@ class Segmenter:
         :meth:`compile_ticked`'s abstract inputs exactly."""
         bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
         cap, nh, nr = bucket
+        n_labels = self.config.n_labels
 
         def full(shape, fill, dtype):
             return jnp.full((batch,) + shape, fill, dtype)
@@ -433,10 +443,10 @@ class Segmenter:
             region_weight=full((nr + 1,), 0.0, jnp.float32),
             beta=full((), self.config.beta, jnp.float32),
             sigma_min=full((), 1.0, jnp.float32),
-            reseed_mu=full((2,), 0.0, jnp.float32),
+            reseed_mu=full((n_labels,), 0.0, jnp.float32),
             reseed_sigma=full((), 1.0, jnp.float32),
         )
-        state = em_mod.blank_tick_state(batch, nh, nr)
+        state = em_mod.blank_tick_state(batch, nh, nr, n_labels)
         vote_plan = jax.vmap(lambda v: em_mod.make_vote_plan(v, nr))(hoods.vertex)
         return hoods, model, state, vote_plan
 
@@ -469,21 +479,37 @@ class Segmenter:
         Initial parameters come from the plan's own (unpadded) statistics
         so the padded trajectory matches the natural-shape one exactly.
 
+        A plan built with *fewer* labels than this session is label-padded
+        with inert sentinel labels (``energy.pad_model_labels``,
+        DESIGN.md §13): the extra labels can never win an argmin, so the
+        real labels take the bitwise natural-K trajectory — this is what
+        lets one ticked pool serve mixed-K traffic.  Plans with more
+        labels than the session are rejected.
+
         Sharded sessions additionally partition the padded hoods
         (``distributed.partition_hoods``: capacity rounded to a shard
         multiple, replication arrays localized per element block) — also
         memoized, so warm sharded traffic pays zero host-side work.
         """
-        memo_key = (bucket, seed, self.config.init, self.config.shards)
+        n_labels = self.config.n_labels
+        plan_labels = plan.problem.model.n_labels
+        if plan_labels > n_labels:
+            raise ValueError(
+                f"plan has {plan_labels} labels but the session compiles "
+                f"for n_labels={n_labels}; re-plan with a wider session"
+            )
+        memo_key = (
+            bucket, seed, self.config.init, self.config.shards, n_labels
+        )
         cached = plan._padded.get(memo_key)
         if cached is not None:
             return cached
         p = plan.problem
         cap, nh, nr = bucket
-        # The padded (+partitioned) hoods/model depend only on the bucket
-        # and shard count — memoized separately so multi-seed traffic pays
-        # the host-side padding/partitioning work once per bucket.
-        hoods_key = ("hoods", bucket, self.config.shards)
+        # The padded (+partitioned) hoods/model depend only on the bucket,
+        # shard count, and label axis — memoized separately so multi-seed
+        # traffic pays the host-side padding/partitioning work once.
+        hoods_key = ("hoods", bucket, self.config.shards, n_labels)
         padded = plan._padded.get(hoods_key)
         if padded is None:
             hoods = pad_hoods(
@@ -492,9 +518,11 @@ class Segmenter:
             if self.config.shards > 1:
                 hoods = distributed_mod.partition_hoods(hoods, self.config.shards)
             model = energy_mod.pad_model(p.model, nr)
+            model = energy_mod.pad_model_labels(model, n_labels)
             padded = plan._padded[hoods_key] = (hoods, model)
         hoods, model = padded
         labels0, mu0, sigma0 = pipeline_mod._initial_params(p, seed, self.config.init)
+        mu0, sigma0 = energy_mod.pad_params_labels(mu0, sigma0, n_labels)
         lab = jnp.zeros((nr + 1,), jnp.int32)
         lab = lab.at[: p.graph.n_regions].set(labels0[: p.graph.n_regions])
         plan._padded[memo_key] = (hoods, model, lab, mu0, sigma0)

@@ -62,3 +62,40 @@ def evaluate(pred, truth) -> SegMetrics:
         porosity=porosity,
         porosity_true=porosity_true,
     )
+
+
+def multiclass_accuracy(pred, truth, n_labels: int) -> float:
+    """Pixel accuracy for K-ary segmentation under the best label
+    matching (MRF label ids are arbitrary, like the binary flip in
+    :func:`evaluate`).
+
+    The matching is the *exact* optimal assignment for K <= 8 (brute-force
+    over the K! permutations of a K x K confusion matrix — trivial at
+    segmentation label counts, and the K=2 instance coincides with
+    ``evaluate``'s flip rule); larger K falls back to greedy matching on
+    the largest confusion entries.
+    """
+    import itertools
+
+    pred = np.asarray(pred).astype(np.int64).ravel()
+    truth = np.asarray(truth).astype(np.int64).ravel()
+    conf = np.zeros((n_labels, n_labels), np.int64)
+    np.add.at(conf, (pred, truth), 1)
+    total = max(len(pred), 1)
+    if n_labels <= 8:
+        best = max(
+            sum(int(conf[p, perm[p]]) for p in range(n_labels))
+            for perm in itertools.permutations(range(n_labels))
+        )
+        return best / total
+    mapping = {}
+    for _ in range(n_labels):
+        flat = int(np.argmax(conf))
+        p, t = divmod(flat, n_labels)
+        if conf[p, t] < 0:
+            break
+        mapping[p] = t
+        conf[p, :] = -1
+        conf[:, t] = -1
+    matched = np.array([mapping.get(p, -1) for p in range(n_labels)])
+    return float(np.mean(matched[pred] == truth))

@@ -6,10 +6,17 @@ or operates on tiny replicated arrays (labels, mu/sigma).  The four touch
 points, and what they become when hood elements are block-partitioned over
 a mesh axis (the hybrid distributed PMRF of the paper's §5 / [15]):
 
-  1. per-hood label counts (smoothness context)   Scatter/ReduceByKey -> +psum
+  1. per-(hood, label) counts (smoothness ctx)    Scatter/ReduceByKey -> +psum
   2. per-hood energy sums (convergence input)     ReduceByKey(Add)    -> +psum
   3. label votes (scatter into the global field)  Scatter(Add)        -> +psum
   4. convergence decision                          AND                 -> pmin
+
+The label count K needs no hook of its own (DESIGN.md §13): callers fold
+K into the *key spaces* of touch points 1 and 3 (``dpp.compound_key`` —
+``hood_id * K + x`` and ``vertex * K + argmin``), so the same psum'd
+segment sums carry the extra axis; counts and votes stay integer-valued,
+keeping the cross-shard sums exact and K-ary sharded labels bitwise equal
+to single-device.
 
 :class:`ReduceCtx` carries those four hooks.  The single-device context
 (``axis=None``, the module constant :data:`LOCAL`) lowers each to the plain

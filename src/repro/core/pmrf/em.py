@@ -38,6 +38,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dpp
 from repro.core.pmrf import collectives
@@ -80,8 +81,8 @@ class EMConfig(NamedTuple):
 
 class EMResult(NamedTuple):
     labels: Array        # (V+1,) int32 (sentinel lane 0)
-    mu: Array            # (2,)
-    sigma: Array         # (2,)
+    mu: Array            # (K,)
+    sigma: Array         # (K,)
     hood_energy: Array   # (n_hoods,) final per-neighborhood energy sums
     total_energy: Array  # scalar
     em_iters: Array      # scalar int32
@@ -107,23 +108,30 @@ class _EmCarry(NamedTuple):
     done: Array
 
 
-def init_params(key: Array, n_regions: int) -> tuple[Array, Array, Array]:
+def init_params(
+    key: Array, n_regions: int, n_labels: int = 2
+) -> tuple[Array, Array, Array]:
     """Paper init: labels and per-label (mu, sigma) random in [0, 255]."""
     k1, k2, k3 = jax.random.split(key, 3)
-    labels = jax.random.randint(k1, (n_regions + 1,), 0, 2).astype(jnp.int32)
+    labels = jax.random.randint(k1, (n_regions + 1,), 0, n_labels).astype(jnp.int32)
     labels = labels.at[n_regions].set(0)
-    mu = jnp.sort(jax.random.uniform(k2, (2,), minval=0.0, maxval=255.0))
-    sigma = jax.random.uniform(k3, (2,), minval=10.0, maxval=80.0)
+    mu = jnp.sort(jax.random.uniform(k2, (n_labels,), minval=0.0, maxval=255.0))
+    sigma = jax.random.uniform(k3, (n_labels,), minval=10.0, maxval=80.0)
     return labels, mu.astype(jnp.float32), sigma.astype(jnp.float32)
 
 
-def quantile_init(region_mean, n_regions: int) -> tuple[Array, Array, Array]:
-    """Data-driven init (beyond-paper option): mu at the 25/75 quantiles,
-    labels by nearest mu."""
+def quantile_init(
+    region_mean, n_regions: int, n_labels: int = 2
+) -> tuple[Array, Array, Array]:
+    """Data-driven init (beyond-paper option): mu at K quantiles spread
+    over [q25, q75] (np.linspace pins the K=2 endpoints to the historical
+    0.25/0.75 literals), labels by nearest mu (ties to the lowest label —
+    the K=2 instance is bit-identical to the binary '<' rule)."""
     y = jnp.asarray(region_mean, jnp.float32)
-    mu = jnp.stack([jnp.quantile(y, 0.25), jnp.quantile(y, 0.75)])
-    sigma = jnp.full((2,), jnp.std(y) / 2.0 + 1.0, jnp.float32)
-    labels = (jnp.abs(y - mu[1]) < jnp.abs(y - mu[0])).astype(jnp.int32)
+    qs = np.linspace(0.25, 0.75, n_labels)
+    mu = jnp.stack([jnp.quantile(y, float(q)) for q in qs])
+    sigma = jnp.full((n_labels,), jnp.std(y) / 2.0 + 1.0, jnp.float32)
+    labels = jnp.argmin(jnp.abs(y[:, None] - mu[None, :]), axis=1).astype(jnp.int32)
     labels = jnp.concatenate([labels, jnp.zeros((1,), jnp.int32)])
     return labels, mu.astype(jnp.float32), sigma
 
@@ -147,6 +155,7 @@ def _map_step(
     masked lane reports converged.  ``active=None`` (the while_loop
     drivers) and ``active=True`` produce bitwise-identical results — the
     mask is a select, never an arithmetic rewrite."""
+    n_labels = int(mu.shape[0])
     if mode == "static-pallas":
         labels, hood_e = E.map_step_fused(
             hoods, model, sctx, carry.labels, mu, sigma, backend=backend, ctx=ctx,
@@ -159,7 +168,7 @@ def _map_step(
         # runs see cross-shard context; per-element mins stay shard-local
         # (elements never straddle shards — only hoods do, via the counts).
         counts = E.hood_label_counts(
-            hoods, carry.labels, backend=backend, ctx=ctx, active=active
+            hoods, carry.labels, n_labels, backend=backend, ctx=ctx, active=active
         )
         energies = E.label_energies(
             hoods, model, carry.labels, mu, sigma, hood_counts=counts,
@@ -172,7 +181,9 @@ def _map_step(
         hood_e = E.hood_energy_sums(
             hoods, min_e, backend=backend, ctx=ctx, active=active
         )
-        labels = E.vote_labels(hoods, arg, hoods.n_regions, ctx=ctx, active=active)
+        labels = E.vote_labels(
+            hoods, arg, hoods.n_regions, n_labels, ctx=ctx, active=active
+        )
     hist = jnp.roll(carry.hist, shift=1, axis=0).at[0].set(hood_e)
     i = carry.i + 1
     # Convergence is decided in the body (not the loop cond) so the
@@ -359,8 +370,8 @@ class TickState(NamedTuple):
     """
 
     labels: Array       # (V+1,) int32
-    mu: Array           # (2,) float32
-    sigma: Array        # (2,) float32
+    mu: Array           # (K,) float32
+    sigma: Array        # (K,) float32
     map_hist: Array     # (WINDOW+1, n_hoods) inner convergence ring
     map_i: Array        # () int32 — iterations in the current MAP loop
     map_done: Array     # () bool  — inner window converged
@@ -389,7 +400,9 @@ def init_tick_lane(labels0: Array, mu0: Array, sigma0: Array, n_hoods: int) -> T
     )
 
 
-def blank_tick_state(batch: int, n_hoods: int, n_regions: int) -> TickState:
+def blank_tick_state(
+    batch: int, n_hoods: int, n_regions: int, n_labels: int = 2
+) -> TickState:
     """An all-empty slot pool: every lane ``done`` (masked out) with benign
     parameter values (sigma=1 so even the discarded masked compute stays
     NaN-free)."""
@@ -399,8 +412,8 @@ def blank_tick_state(batch: int, n_hoods: int, n_regions: int) -> TickState:
 
     return TickState(
         labels=full((n_regions + 1,), 0, jnp.int32),
-        mu=full((2,), 0.0, jnp.float32),
-        sigma=full((2,), 1.0, jnp.float32),
+        mu=full((n_labels,), 0.0, jnp.float32),
+        sigma=full((n_labels,), 1.0, jnp.float32),
         map_hist=full((WINDOW + 1, n_hoods), 0.0, jnp.float32),
         map_i=full((), 0, jnp.int32),
         map_done=full((), False, jnp.bool_),
@@ -574,6 +587,7 @@ def _pool_tick_micro(
     (faithful, static-pallas) keep the vmapped lane path.
     """
     B = s.labels.shape[0]
+    K = int(s.mu.shape[1])
     nh, nr = hoods.n_hoods, hoods.n_regions
     lane = jnp.arange(B, dtype=jnp.int32)
     active = ~s.done                                   # (B,)
@@ -603,14 +617,22 @@ def _pool_tick_micro(
     valid = hoods.valid
     validf = valid.astype(jnp.float32)
     x = jnp.take_along_axis(s.labels, hoods.vertex, axis=1)
-    xf = x.astype(jnp.float32)
-    n1 = count_by_hood(jnp.where(activef, validf * xf, 0.0))
+    # Per-(hood, label) counts: K run-sum passes over the hood runs (the
+    # run-boundary idiom has no key axis to widen, so K folds into a
+    # static unrolled loop of exact integer count reductions).
+    eqs = [(x == l).astype(jnp.float32) for l in range(K)]
+    cnt_e = [
+        jnp.take_along_axis(
+            count_by_hood(jnp.where(activef, validf * eqs[l], 0.0)),
+            hoods.hood_id, axis=1,
+        )
+        for l in range(K)
+    ]
     nall = count_by_hood(validf)                       # loop-invariant
 
     y = jnp.take_along_axis(model.region_mean, hoods.vertex, axis=1)
     w = jnp.take_along_axis(model.region_weight, hoods.vertex, axis=1) * validf
-    sig = jnp.maximum(s.sigma, model.sigma_min[:, None])   # (B, 2)
-    n1_e = jnp.take_along_axis(n1, hoods.hood_id, axis=1)
+    sig = jnp.maximum(s.sigma, model.sigma_min[:, None])   # (B, K)
     nall_e = jnp.take_along_axis(nall, hoods.hood_id, axis=1)
     denom = jnp.maximum(nall_e - 1.0, 1.0)
     beta = model.beta[:, None]
@@ -620,19 +642,31 @@ def _pool_tick_micro(
         sl = sig[:, l][:, None]
         return w * (d * d / (2.0 * sl * sl) + jnp.log(sl))
 
-    e0 = data_term(0) + beta * jnp.maximum(n1_e - xf, 0.0) / denom * validf
-    e1 = data_term(1) + beta * jnp.maximum(
-        (nall_e - n1_e) - (1.0 - xf), 0.0
-    ) / denom * validf
-
-    min_e = jnp.minimum(e0, e1)
-    arg = (e1 < e0).astype(jnp.int32)      # argmin over {e0, e1}, ties -> 0
+    # (nall - cnt_l) - (1 - [x == l]): integer-exact, so K=2 is bitwise the
+    # historical n1-based pair of expressions (DESIGN.md §13).
+    es = [
+        data_term(l) + beta * jnp.maximum(
+            (nall_e - cnt_e[l]) - (1.0 - eqs[l]), 0.0
+        ) / denom * validf
+        for l in range(K)
+    ]
+    energies = jnp.stack(es)                            # (K, B, cap)
+    min_e = jnp.min(energies, axis=0)
+    arg = jnp.argmin(energies, axis=0).astype(jnp.int32)   # ties -> lowest
     hood_e = seg_sum_hood(jnp.where(valid, min_e, 0.0))[:, :nh]
-    votes1 = count_by_vertex(
-        jnp.where(activef, jnp.where(valid, arg, 0).astype(jnp.float32), 0.0)
-    )
-    votes_all = count_by_vertex(validf)                # loop-invariant
-    new_labels = (votes1 * 2.0 > votes_all).astype(jnp.int32)
+    votes = jnp.stack(
+        [
+            count_by_vertex(
+                jnp.where(
+                    activef,
+                    jnp.where(valid, (arg == l).astype(jnp.float32), 0.0),
+                    0.0,
+                )
+            )
+            for l in range(K)
+        ]
+    )                                                   # (K, B, nr+1)
+    new_labels = jnp.argmax(votes, axis=0).astype(jnp.int32)  # plurality
     new_labels = new_labels.at[:, nr].set(0)
 
     map_hist = jnp.roll(s.map_hist, shift=1, axis=1).at[:, 0].set(hood_e)
@@ -649,16 +683,16 @@ def _pool_tick_micro(
 
     # --- EM boundary (== update_parameters static + em convergence) ----
     yv, wv = model.region_mean, model.region_weight
-    seg_flat = (new_labels + lane[:, None] * 2).reshape(-1)
+    seg_flat = (new_labels + lane[:, None] * K).reshape(-1)
 
-    def seg2(vals):                                     # (B, V+1) -> (B, 2)
+    def seg_lab(vals):                                  # (B, V+1) -> (B, K)
         return dpp.reduce_by_key(
-            seg_flat, vals.reshape(-1), B * 2, op="add"
-        ).reshape(B, 2)
+            seg_flat, vals.reshape(-1), B * K, op="add"
+        ).reshape(B, K)
 
-    sum_w = seg2(wv)
-    sum_wy = seg2(wv * yv)
-    sum_wyy = seg2(wv * yv * yv)
+    sum_w = seg_lab(wv)
+    sum_wy = seg_lab(wv * yv)
+    sum_wyy = seg_lab(wv * yv * yv)
     safe_w = jnp.maximum(sum_w, 1e-6)
     mu_b = sum_wy / safe_w
     var = jnp.maximum(sum_wyy / safe_w - mu_b * mu_b, 0.0)

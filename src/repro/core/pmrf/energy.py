@@ -11,6 +11,18 @@ current label field.  This is the standard PMRF likelihood+prior energy
 ([39]); the paper's Map step computes the deviation term, and the
 smoothness enters through the neighborhood structure.
 
+The label count K is a first-class axis (DESIGN.md §13): every function
+here is K-ary, with K carried by the array shapes (``mu``/``sigma``/
+``model.reseed_mu`` are ``(K,)``) rather than a separate argument —
+two traces with different K never alias because their shapes differ.
+The paper's binary PMRF is the K=2 instance, and the K=2 results are
+bit-identical to the historical binary implementation: every K-ary
+rewrite below only touches integer-valued quantities (counts, votes),
+whose float arithmetic is exact, so argmins/votes/labels are unchanged.
+Per-hood label counts and label votes fold K into the existing keyed
+reductions via ``dpp.compound_key`` — no new scatter launches per
+iteration, the key spaces just widen by a factor of K.
+
 Three execution modes (DESIGN.md §2, the baseline-vs-optimized axis):
 
 * ``faithful`` — the paper's exact primitive sequence per MAP iteration:
@@ -37,6 +49,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dpp
 from repro.core.pmrf.collectives import LOCAL, ReduceCtx
@@ -57,25 +70,42 @@ class EnergyModel(NamedTuple):
     region_weight: Array # (V+1,) float32, unit-mean pixel counts, sentinel 0
     beta: Array          # scalar float32 smoothness weight
     sigma_min: Array     # scalar float32 lower bound on sigma
-    reseed_mu: Array     # (2,) float32 — q10/q90 of region means, used to
-                         # re-seed a label whose cluster dies during EM
+    reseed_mu: Array     # (K,) float32 — data quantiles spread over
+                         # [q10, q90], used to re-seed a label whose
+                         # cluster dies during EM (K=2: exactly [q10, q90])
     reseed_sigma: Array  # scalar float32
+
+    @property
+    def n_labels(self) -> int:
+        """K, carried by the reseed array shape (DESIGN.md §13)."""
+        return int(self.reseed_mu.shape[0])
 
 
 def make_energy_model(
-    region_mean, region_size, *, beta: float = 0.75, sigma_min: float = 2.0
+    region_mean,
+    region_size,
+    *,
+    beta: float = 0.75,
+    sigma_min: float = 2.0,
+    n_labels: int = 2,
 ) -> EnergyModel:
+    if n_labels < 2:
+        raise ValueError(f"n_labels must be >= 2, got {n_labels}")
     y = jnp.asarray(region_mean, jnp.float32)
     mean = jnp.concatenate([y, jnp.zeros((1,), jnp.float32)])
     w = jnp.asarray(region_size, jnp.float32)
     w = w / jnp.maximum(jnp.mean(w), 1e-6)
     w = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+    # Re-seed quantiles: np.linspace pins the endpoints exactly, so K=2
+    # evaluates jnp.quantile at the same 0.10/0.90 literals as the
+    # historical binary model (bit-identical reseed targets).
+    qs = np.linspace(0.10, 0.90, n_labels)
     return EnergyModel(
         region_mean=mean,
         region_weight=w,
         beta=jnp.float32(beta),
         sigma_min=jnp.float32(sigma_min),
-        reseed_mu=jnp.stack([jnp.quantile(y, 0.10), jnp.quantile(y, 0.90)]),
+        reseed_mu=jnp.stack([jnp.quantile(y, float(q)) for q in qs]),
         reseed_sigma=jnp.maximum(jnp.std(y) / 2.0, sigma_min),
     )
 
@@ -90,18 +120,20 @@ def label_energies(
     *,
     backend: Optional[str] = None,
 ) -> Array:
-    """Energies for both candidate labels, shape (2, H_pad).
+    """Energies for all K candidate labels, shape (K, H_pad).
 
-    ``labels`` is (V+1,) int32 (sentinel lane ignored via zero weight).
-    The Map DPP of the paper's "Compute Energy Function" step.
+    ``labels`` is (V+1,) int32 (sentinel lane ignored via zero weight) and
+    K is carried by ``mu``/``sigma`` (both (K,)).  The Map DPP of the
+    paper's "Compute Energy Function" step.
 
-    ``hood_counts`` optionally supplies the per-hood (label-1 count, size)
-    arrays — the unified driver passes counts computed through its
-    collective context (:func:`hood_label_counts`) so sharded runs see
+    ``hood_counts`` optionally supplies the per-(hood, label) count matrix
+    and per-hood sizes — the unified driver passes counts computed through
+    its collective context (:func:`hood_label_counts`) so sharded runs see
     globally psum-reduced neighborhood context.
 
     ``backend`` selects the keyed-reduction lowering (DESIGN.md §3).
     """
+    n_labels = int(mu.shape[0])
     v = hoods.vertex
     y = model.region_mean[v]
     w = model.region_weight[v] * hoods.valid.astype(jnp.float32)
@@ -109,58 +141,52 @@ def label_energies(
 
     sig = jnp.maximum(sigma, model.sigma_min)
 
-    def data_term(l: int) -> Array:
-        d = (y - mu[l])
-        return w * (d * d / (2.0 * sig[l] * sig[l]) + jnp.log(sig[l]))
-
-    # Per-hood label-1 counts (ReduceByKey) for the smoothness term.
     if hood_counts is None:
-        ones = hoods.valid.astype(jnp.float32)
-        n1 = dpp.reduce_by_key(
-            hoods.hood_id, ones * x, hoods.n_hoods + 1, op="add", backend=backend
-        )
-        nall = dpp.reduce_by_key(
-            hoods.hood_id, ones, hoods.n_hoods + 1, op="add", backend=backend
-        )
+        counts, nall = hood_label_counts(hoods, labels, n_labels, backend=backend)
     else:
-        n1, nall = hood_counts
-    n1_e = n1[hoods.hood_id]
+        counts, nall = hood_counts
+    cnt_e = counts[hoods.hood_id]    # (H_pad, K)
     nall_e = nall[hoods.hood_id]
-    xf = x.astype(jnp.float32)
 
     # Disagreement counts are normalized by the number of *other* elements
     # in the neighborhood so beta is independent of hood size (hood sizes
     # vary wildly across datasets — the paper's §4.3.3 demographics).
     denom = jnp.maximum(nall_e - 1.0, 1.0)
 
-    def smooth_term(l: int) -> Array:
-        if l == 1:
-            others_diff = (nall_e - n1_e) - (1.0 - xf)
-        else:
-            others_diff = n1_e - xf
-        return model.beta * jnp.maximum(others_diff, 0.0) / denom * hoods.valid
+    # #{u != e : x_u != l} = (|hood| - #{x_u = l}) - [x_e != l].  Every
+    # operand is an integer-valued float (exact), so the K=2 instance is
+    # bit-identical to the historical n1-based binary expressions.
+    def label_energy(l: int) -> Array:
+        d = (y - mu[l])
+        data = w * (d * d / (2.0 * sig[l] * sig[l]) + jnp.log(sig[l]))
+        eq = (x == l).astype(jnp.float32)
+        others_diff = (nall_e - cnt_e[:, l]) - (1.0 - eq)
+        return data + model.beta * jnp.maximum(others_diff, 0.0) / denom * hoods.valid
 
-    e0 = data_term(0) + smooth_term(0)
-    e1 = data_term(1) + smooth_term(1)
-    return jnp.stack([e0, e1])
+    return jnp.stack([label_energy(l) for l in range(n_labels)])
 
 
 def hood_label_counts(
     hoods: Hoods,
     labels: Array,
+    n_labels: int,
     *,
     backend: Optional[str] = None,
     ctx: ReduceCtx = LOCAL,
     active: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
-    """Per-hood (label-1 count, size) — collective touch point 1.
+    """Per-(hood, label) counts + per-hood sizes — collective touch point 1.
 
-    Matches the expressions :func:`label_energies` uses when computing the
-    counts itself (single-device bit-identity); the sharded context psums
-    the local segment sums so shards see cross-shard neighborhood context.
+    The label axis is folded into the existing keyed reduction via
+    ``dpp.compound_key`` (key = hood_id * K + x), so one segment-sum over a
+    K-times-wider key space replaces per-label reductions — no new scatter
+    launches (DESIGN.md §13).  ``compound_key`` statically verifies the
+    (n_hoods + 1) * K key space fits the enabled integer width.
+
     Counts are integer-valued floats, so the psum of per-shard partials is
     *exact* — energies, argmins, and therefore labels are bitwise equal to
-    the single-device run.
+    the single-device run.  Returns ``(counts, nall)`` with ``counts``
+    shaped (n_hoods + 1, K) and ``nall`` (n_hoods + 1,).
 
     ``active`` is the ticked driver's per-lane mask (DESIGN.md §12): a
     retired lane's counts are exact zeros, a live lane's are bitwise
@@ -168,13 +194,60 @@ def hood_label_counts(
     """
     x = labels[hoods.vertex]
     ones = hoods.valid.astype(jnp.float32)
-    n1 = ctx.segment_sum(
-        hoods.hood_id, ones * x, hoods.n_hoods + 1, backend=backend, where=active
+    key = dpp.compound_key(
+        hoods.hood_id, x, n_labels, major_span=hoods.n_hoods + 1
     )
+    counts = ctx.segment_sum(
+        key, ones, (hoods.n_hoods + 1) * n_labels, backend=backend, where=active
+    ).reshape(hoods.n_hoods + 1, n_labels)
     nall = ctx.segment_sum(
         hoods.hood_id, ones, hoods.n_hoods + 1, backend=backend, where=active
     )
-    return n1, nall
+    return counts, nall
+
+
+#: Data-term sentinel for inert (padded) labels — mixed-K pools
+#: (DESIGN.md §13).  A label with mu = INERT_MU is ~1e8 intensity units
+#: from any region mean, so its energy (~w * 1e15) can never win the
+#: per-element argmin: it collects zero counts, zero votes, and zero mass
+#: (re-seeding the dead label back to INERT_MU each M-step).  Real-label
+#: arithmetic is untouched, so a K-padded lane's trajectory is bitwise the
+#: natural-K trajectory.
+INERT_MU = 1.0e8
+
+
+def pad_model_labels(model: EnergyModel, n_labels: int) -> EnergyModel:
+    """Extend the model's label axis to ``n_labels`` with inert labels
+    (mixed-K serving, DESIGN.md §13): padded reseed targets carry
+    :data:`INERT_MU` so a dead padded label re-seeds back to inertness."""
+    cur = model.n_labels
+    if n_labels < cur:
+        raise ValueError(f"cannot shrink label axis from {cur} to {n_labels}")
+    if n_labels == cur:
+        return model
+    pad = jnp.full((n_labels - cur,), INERT_MU, jnp.float32)
+    return model._replace(reseed_mu=jnp.concatenate([model.reseed_mu, pad]))
+
+
+def pad_params_labels(
+    mu0: Array, sigma0: Array, n_labels: int
+) -> Tuple[Array, Array]:
+    """Extend initial (mu, sigma) to ``n_labels`` with inert labels (the
+    companion of :func:`pad_model_labels` for a lane's initial params)."""
+    cur = int(mu0.shape[0])
+    if n_labels < cur:
+        raise ValueError(f"cannot shrink label axis from {cur} to {n_labels}")
+    if n_labels == cur:
+        return mu0, sigma0
+    mu = jnp.concatenate(
+        [jnp.asarray(mu0, jnp.float32),
+         jnp.full((n_labels - cur,), INERT_MU, jnp.float32)]
+    )
+    sigma = jnp.concatenate(
+        [jnp.asarray(sigma0, jnp.float32),
+         jnp.ones((n_labels - cur,), jnp.float32)]
+    )
+    return mu, sigma
 
 
 def pad_model(model: EnergyModel, n_regions: int) -> EnergyModel:
@@ -211,25 +284,40 @@ def min_energies_static(energies: Array) -> Tuple[Array, Array]:
 def min_energies_faithful(
     hoods: Hoods, energies: Array, *, backend: Optional[str] = None
 ) -> Tuple[Array, Array]:
-    """Paper-faithful: replicate to 2|hoods| lanes via the memory-free
-    Gather (oldIndex/testLabel), SortByKey so each element's two label
-    energies are adjacent, ReduceByKey(Min) per element."""
+    """Paper-faithful: replicate to K|hoods| lanes (Gather), SortByKey so
+    each element's K label energies are adjacent, ReduceByKey(Min) per
+    element.
+
+    K=2 uses the precomputed memory-free replication arrays
+    (oldIndex/testLabel — the paper's exact §3.2.2 layout, shard-localized
+    by ``distributed.partition_hoods``); K>2 builds the equivalent
+    replication at trace time from the (K, H) energy array.  Both feed the
+    identical Sort + segmented-Min, and Min is order-independent, so the
+    per-element results agree bitwise with the static axis-min.
+    """
+    n_labels = int(energies.shape[0])
     h_pad = hoods.capacity
-    rep_e = energies[hoods.rep_test_label, hoods.rep_old_index]
     big = jnp.float32(3.4e38)
-    rep_e = jnp.where(hoods.rep_valid, rep_e, big)
-    rep_key = jnp.where(
-        hoods.rep_valid, hoods.rep_old_index, h_pad
-    ).astype(jnp.int32)
+    if n_labels == 2:
+        rep_e = energies[hoods.rep_test_label, hoods.rep_old_index]
+        rep_e = jnp.where(hoods.rep_valid, rep_e, big)
+        rep_key = jnp.where(
+            hoods.rep_valid, hoods.rep_old_index, h_pad
+        ).astype(jnp.int32)
+    else:
+        lane = jnp.arange(h_pad, dtype=jnp.int32)
+        rep_key = jnp.tile(jnp.where(hoods.valid, lane, h_pad), n_labels)
+        rep_e = jnp.where(hoods.valid[None, :], energies, big).reshape(-1)
 
     sk, se = dpp.sort_by_key(rep_key, rep_e)
     min_e = dpp.reduce_by_key(
         sk, se, h_pad + 1, op="min", indices_are_sorted=True, backend=backend
     )[:h_pad]
     min_e = jnp.where(hoods.valid, min_e, 0.0)
-    # Recover the argmin label: the min equals exactly one of the two label
-    # energies (ties resolve to label 0, matching argmin semantics).
-    arg = jnp.where(min_e == energies[0], 0, 1).astype(jnp.int32)
+    # Recover the argmin label: the min equals at least one of the K label
+    # energies; argmax of the match mask takes the first (ties resolve to
+    # the lowest label, matching argmin semantics).
+    arg = jnp.argmax(energies == min_e[None, :], axis=0).astype(jnp.int32)
     arg = jnp.where(hoods.valid, arg, 0)
     return min_e, arg
 
@@ -255,6 +343,7 @@ def vote_labels(
     hoods: Hoods,
     arg: Array,
     n_regions: int,
+    n_labels: int,
     *,
     ctx: ReduceCtx = LOCAL,
     active: Optional[Array] = None,
@@ -263,26 +352,31 @@ def vote_labels(
 
     Deterministic adaptation: a vertex can belong to several neighborhoods
     whose scatters race in the paper (it notes the resulting label noise in
-    §4.2.2); we resolve by majority vote via Scatter(add) of one-hot votes
-    (collective touch point 3: the vote field is psum'd across shards —
-    votes are integer-valued, so the cross-shard sum is exact and sharded
-    label updates are bitwise identical to single-device).
+    §4.2.2); we resolve by plurality vote.  The label axis folds into the
+    vote scatter via ``dpp.compound_key`` (key = vertex * K + argmin), one
+    Scatter(Add) into a (V+1)*K field, then argmax over the label axis
+    (ties to the lowest label — for K=2 this is exactly the historical
+    "strict majority picks 1" rule, since votes are integer-exact).
+    Collective touch point 3: the vote field is psum'd across shards —
+    integer votes make the cross-shard sum exact, so sharded label updates
+    are bitwise identical to single-device.
     Returns (V+1,) labels with the sentinel lane forced to 0.
 
     ``active`` (touch point 3's per-lane mask, DESIGN.md §12) zeroes a
     retired lane's vote field; the caller discards the resulting all-zero
     labels, so stale votes can never leak into a live update.
     """
-    votes1 = ctx.vote_scatter(
-        jnp.where(hoods.valid, arg, 0).astype(jnp.float32),
-        hoods.vertex,
-        n_regions + 1,
+    key = dpp.compound_key(
+        hoods.vertex, jnp.where(hoods.valid, arg, 0), n_labels,
+        major_span=n_regions + 1,
+    )
+    votes = ctx.vote_scatter(
+        hoods.valid.astype(jnp.float32),
+        key,
+        (n_regions + 1) * n_labels,
         where=active,
-    )
-    votes_all = ctx.vote_scatter(
-        hoods.valid.astype(jnp.float32), hoods.vertex, n_regions + 1, where=active
-    )
-    new = (votes1 * 2.0 > votes_all).astype(jnp.int32)
+    ).reshape(n_regions + 1, n_labels)
+    new = jnp.argmax(votes, axis=1).astype(jnp.int32)
     return new.at[n_regions].set(0)
 
 
@@ -296,14 +390,15 @@ class StaticMapContext(NamedTuple):
 
     Everything here depends only on the neighborhood structure and the
     region statistics — not on the evolving labels — so it is computed once
-    per ``run_em`` call instead of once per MAP iteration.
+    per ``run_em`` call instead of once per MAP iteration.  (The K-ary
+    plurality vote needs no hoisted denominator: argmax over per-label
+    vote counts replaced the binary votes1-vs-votes_all comparison.)
     """
 
     y: Array          # (H_pad,) gathered region mean per hood element
     w: Array          # (H_pad,) gathered region weight, 0 on padding
     validf: Array     # (H_pad,) 1.0/0.0 validity mask
     nall_e: Array     # (H_pad,) neighborhood size per element
-    votes_all: Array  # (V+1,) per-vertex total vote denominators
 
 
 def make_static_context(
@@ -316,13 +411,11 @@ def make_static_context(
     v = hoods.vertex
     validf = hoods.valid.astype(jnp.float32)
     nall = ctx.segment_sum(hoods.hood_id, validf, hoods.n_hoods + 1, backend=backend)
-    votes_all = ctx.vote_scatter(validf, v, hoods.n_regions + 1)
     return StaticMapContext(
         y=model.region_mean[v],
         w=model.region_weight[v] * validf,
         validf=validf,
         nall_e=nall[hoods.hood_id],
-        votes_all=votes_all,
     )
 
 
@@ -341,30 +434,38 @@ def map_step_fused(
     """One MAP iteration in static-pallas mode -> (new labels, hood sums).
 
     Per iteration this issues exactly one keyed reduction (the
-    label-dependent neighborhood count) plus one fused kernel launch; the
-    unfused static mode issues three segment-sums and two vote scatters on
-    top of the elementwise energy graph.
+    label-dependent per-(hood, label) count, K folded into the key space)
+    plus one fused kernel launch; the unfused static mode issues
+    segment-sums and a vote scatter on top of the elementwise energy graph.
 
     Under a sharded context the kernel runs unchanged per shard (its inputs
     are the shard's hood elements plus globally-reduced counts) and the
-    collectives stay *outside* the launch: the pre-kernel n1 count is a
-    psum'd segment sum, the post-kernel hood sums and vote field are psum'd
-    partials.
+    collectives stay *outside* the launch: the pre-kernel count is a psum'd
+    segment sum, the post-kernel hood sums and (K, V+1) vote field are
+    psum'd partials.
 
     ``active`` applies the ticked driver's per-lane mask (DESIGN.md §12) to
     the kernel's keyed outputs: a retired lane's hood sums and votes are
     exact zeros, a live lane's are bitwise unchanged.
     """
+    n_labels = int(mu.shape[0])
     x = labels[hoods.vertex]
     xf = x.astype(jnp.float32) * sctx.validf
-    n1 = ctx.segment_sum(
-        hoods.hood_id, xf, hoods.n_hoods + 1, backend=backend, where=active
+    # The one keyed reduction outside the kernel: per-(hood, label) counts,
+    # K folded into the key space (neighborhood sizes are hoisted in sctx).
+    key = dpp.compound_key(
+        hoods.hood_id, x, n_labels, major_span=hoods.n_hoods + 1
     )
+    counts = ctx.segment_sum(
+        key, sctx.validf, (hoods.n_hoods + 1) * n_labels, backend=backend,
+        where=active,
+    ).reshape(hoods.n_hoods + 1, n_labels)
+    cnt_e = counts[hoods.hood_id].T  # (K, H_pad) — the kernel's label grid
     sig = jnp.maximum(sigma, model.sigma_min)
-    _, _, hood_e, votes1 = kops.fused_map_step(
+    _, _, hood_e, votes = kops.fused_map_step(
         sctx.y,
         sctx.w,
-        n1[hoods.hood_id],
+        cnt_e,
         sctx.nall_e,
         xf,
         sctx.validf,
@@ -379,10 +480,10 @@ def map_step_fused(
     )
     if active is not None:
         hood_e = jnp.where(active, hood_e, 0.0)
-        votes1 = jnp.where(active, votes1, 0.0)
+        votes = jnp.where(active, votes, 0.0)
     hood_e = ctx.psum(hood_e)
-    votes1 = ctx.psum(votes1)
-    new = (votes1 * 2.0 > sctx.votes_all).astype(jnp.int32)
+    votes = ctx.psum(votes)
+    new = jnp.argmax(votes, axis=0).astype(jnp.int32)
     return new.at[hoods.n_regions].set(0), hood_e
 
 
@@ -393,7 +494,9 @@ def update_parameters(
 
     faithful mode groups regions by SortByKey(label) + segmented reduce;
     static mode uses labels directly as segment ids.  Identical math.
+    K comes from the model's reseed array (DESIGN.md §13).
     """
+    n_labels = model.n_labels
     y = model.region_mean
     w = model.region_weight  # sentinel lane has weight 0
     lab = labels
@@ -406,19 +509,19 @@ def update_parameters(
         seg, sy, sw = lab, y, w
         sorted_flag = False
 
-    sum_w = dpp.reduce_by_key(seg, sw, 2, op="add", indices_are_sorted=sorted_flag)
-    sum_wy = dpp.reduce_by_key(seg, sw * sy, 2, op="add", indices_are_sorted=sorted_flag)
-    sum_wyy = dpp.reduce_by_key(seg, sw * sy * sy, 2, op="add", indices_are_sorted=sorted_flag)
+    sum_w = dpp.reduce_by_key(seg, sw, n_labels, op="add", indices_are_sorted=sorted_flag)
+    sum_wy = dpp.reduce_by_key(seg, sw * sy, n_labels, op="add", indices_are_sorted=sorted_flag)
+    sum_wyy = dpp.reduce_by_key(seg, sw * sy * sy, n_labels, op="add", indices_are_sorted=sorted_flag)
     safe_w = jnp.maximum(sum_w, 1e-6)
     mu = sum_wy / safe_w
     var = jnp.maximum(sum_wyy / safe_w - mu * mu, 0.0)
     sigma = jnp.maximum(jnp.sqrt(var), model.sigma_min)
 
     # Cluster-death re-seeding (EM robustness adaptation, DESIGN.md §8):
-    # a label that captured (almost) no mass is re-seeded at the far data
-    # quantile (label 0 -> q10, label 1 -> q90, matching the sorted-mu
-    # initialization convention) instead of collapsing to a degenerate
-    # Gaussian that can never recapture mass.
+    # a label that captured (almost) no mass is re-seeded at its data
+    # quantile (label l -> the l-th of K quantiles spread over [q10, q90],
+    # matching the sorted-mu initialization convention) instead of
+    # collapsing to a degenerate Gaussian that can never recapture mass.
     dead = sum_w < 1e-3 * jnp.sum(sum_w)
     mu = jnp.where(dead, model.reseed_mu, mu)
     sigma = jnp.where(dead, model.reseed_sigma, sigma)

@@ -40,7 +40,7 @@ class Problem:
 
 @dataclass
 class SegmentationResult:
-    segmentation: np.ndarray      # (H, W) int32 {0,1}
+    segmentation: np.ndarray      # (H, W) int32 {0..K-1}
     region_labels: np.ndarray     # (V,) int32
     mu: np.ndarray
     sigma: np.ndarray
@@ -58,10 +58,13 @@ def initialize(
     overseg_iters: int = 5,
     beta: float = 0.75,
     sigma_min: float = 2.0,
+    n_labels: int = 2,
     oversegmentation=None,
 ) -> Problem:
     """Initialization phase (paper Alg. 2 lines 1-5): graph + cliques +
-    neighborhoods.  Untimed in the paper's methodology but fully built."""
+    neighborhoods.  Untimed in the paper's methodology but fully built.
+    ``n_labels`` sizes the model's label axis (K-ary segmentation,
+    DESIGN.md §13); the graph/clique/hood structure is label-free."""
     img = jnp.asarray(image, jnp.float32)
     if oversegmentation is None:
         labels_px = oversegment.slic(img, grid=overseg_grid, iters=overseg_iters)
@@ -73,7 +76,8 @@ def initialize(
     cliques = enumerate_maximal_cliques(graph)
     hoods = build_hoods(graph, cliques)
     model = make_energy_model(
-        graph.region_mean, graph.region_size, beta=beta, sigma_min=sigma_min
+        graph.region_mean, graph.region_size, beta=beta, sigma_min=sigma_min,
+        n_labels=n_labels,
     )
     return Problem(
         graph=graph,
@@ -85,9 +89,14 @@ def initialize(
 
 
 def _initial_params(problem: Problem, seed: int, init: str):
+    n_labels = problem.model.n_labels  # K rides on the model (DESIGN.md §13)
     if init == "random":
-        return em_mod.init_params(jax.random.PRNGKey(seed), problem.graph.n_regions)
-    return em_mod.quantile_init(problem.graph.region_mean, problem.graph.n_regions)
+        return em_mod.init_params(
+            jax.random.PRNGKey(seed), problem.graph.n_regions, n_labels
+        )
+    return em_mod.quantile_init(
+        problem.graph.region_mean, problem.graph.n_regions, n_labels
+    )
 
 
 def optimize(

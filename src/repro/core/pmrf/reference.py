@@ -8,10 +8,18 @@
   per-neighborhood like a single OpenMP thread's work), with NO inner
   fine-grained parallelism and the ragged per-neighborhood memory layout
   the paper attributes the OpenMP code's cache behaviour to.
+* ``golden_em``   — the golden test oracle (DESIGN.md §13): a pure-NumPy
+  float32 transcription of the K-ary static-mode driver with the *same
+  accumulation order* as XLA's segment reductions, so its labels,
+  parameters, and iteration counts are bit-identical to ``run_em`` on CPU
+  (asserted by ``tests/test_golden.py`` against checked-in fixtures).
 
-Both compute the same energies/updates as the DPP engine (numerically
-equal labels given the same schedule), so runtime ratios isolate the
-execution model — the paper's experimental design.
+All three are K-ary (the label count rides on ``mu0``'s length, matching
+the engine's convention).  ``serial_em``/``coarse_em`` compute the same
+energies/updates as the DPP engine in float64 (numerically equal labels
+given the same schedule), so runtime ratios isolate the execution model —
+the paper's experimental design.  ``golden_em`` trades their float64
+comfort for exact float32 trajectory parity.
 
 On this container there is one core, so ``coarse_em`` measures the
 coarse-grained formulation at concurrency 1 (the paper's p=1 column);
@@ -83,6 +91,7 @@ def _em_generic(
     reseed_mu = np.asarray(model.reseed_mu)
     reseed_sigma = float(model.reseed_sigma)
     n_regions = hoods.n_regions
+    n_labels = int(np.asarray(mu0).shape[0])
 
     labels = np.asarray(labels0).copy()
     mu = np.asarray(mu0, np.float64).copy()
@@ -100,8 +109,7 @@ def _em_generic(
 
         for it in range(max_map_iters):
             map_total += 1
-            votes1 = np.zeros(n_regions + 1, np.float64)
-            votes_all = np.zeros(n_regions + 1, np.float64)
+            votes = np.zeros((n_regions + 1, n_labels), np.float64)
             sig = np.maximum(sigma, sig_min)
 
             if mode == "serial":
@@ -111,24 +119,22 @@ def _em_generic(
                         hood_e[h] = 0.0
                         continue
                     x_row = labels[row]
-                    n1 = float(x_row.sum())
+                    cnt = np.bincount(x_row, minlength=n_labels).astype(np.float64)
                     nall = float(len(row))
                     denom = max(nall - 1.0, 1.0)
                     esum = 0.0
                     for j, v in enumerate(row):
                         yv, wv, xv = float(y_all[v]), float(w_all[v]), int(x_row[j])
-                        e0 = _label_energy_vertex(
-                            yv, wv, 0, mu, sig, n1 - xv, denom, beta
-                        )
-                        e1 = _label_energy_vertex(
-                            yv, wv, 1, mu, sig, (nall - n1) - (1 - xv), denom, beta
-                        )
-                        if e0 <= e1:
-                            esum += e0
-                        else:
-                            esum += e1
-                            votes1[v] += 1.0
-                        votes_all[v] += 1.0
+                        best, best_e = 0, None
+                        for l in range(n_labels):
+                            diff = (nall - cnt[l]) - (0.0 if xv == l else 1.0)
+                            e_l = _label_energy_vertex(
+                                yv, wv, l, mu, sig, diff, denom, beta
+                            )
+                            if best_e is None or e_l < best_e:
+                                best, best_e = l, e_l
+                        esum += best_e
+                        votes[v, best] += 1.0
                     hood_e[h] = esum
             else:
                 # coarse outer-parallel: per-neighborhood vectorized numpy
@@ -139,22 +145,26 @@ def _em_generic(
                         continue
                     yv = y_all[row]
                     wv = w_all[row]
-                    xv = labels[row].astype(np.float64)
-                    n1 = xv.sum()
+                    x_row = labels[row]
+                    cnt = np.bincount(x_row, minlength=n_labels).astype(np.float64)
                     nall = float(len(row))
                     denom = max(nall - 1.0, 1.0)
-                    d0 = yv - mu[0]
-                    d1 = yv - mu[1]
-                    e0 = wv * (d0 * d0 / (2 * sig[0] * sig[0]) + np.log(sig[0])) \
-                        + beta * np.maximum(n1 - xv, 0.0) / denom
-                    e1 = wv * (d1 * d1 / (2 * sig[1] * sig[1]) + np.log(sig[1])) \
-                        + beta * np.maximum((nall - n1) - (1 - xv), 0.0) / denom
-                    pick1 = e1 < e0
-                    hood_e[h] = np.where(pick1, e1, e0).sum()
-                    np.add.at(votes1, row, pick1.astype(np.float64))
-                    np.add.at(votes_all, row, 1.0)
+                    es = []
+                    for l in range(n_labels):
+                        d = yv - mu[l]
+                        eq = (x_row == l).astype(np.float64)
+                        es.append(
+                            wv * (d * d / (2 * sig[l] * sig[l]) + np.log(sig[l]))
+                            + beta * np.maximum(
+                                (nall - cnt[l]) - (1.0 - eq), 0.0
+                            ) / denom
+                        )
+                    e_mat = np.stack(es)
+                    pick = np.argmin(e_mat, axis=0)
+                    hood_e[h] = e_mat[pick, np.arange(len(row))].sum()
+                    np.add.at(votes, (row, pick), 1.0)
 
-            labels = (votes1 * 2.0 > votes_all).astype(np.int32)
+            labels = np.argmax(votes, axis=1).astype(np.int32)
             labels = np.concatenate([labels[:n_regions], [0]])
             hist = np.roll(hist, 1, axis=0)
             hist[0] = hood_e
@@ -168,7 +178,7 @@ def _em_generic(
         w_eff = w_all[:-1]
         y_eff = y_all[:-1]
         lab_eff = labels[:n_regions]
-        for l in (0, 1):
+        for l in range(n_labels):
             sel = lab_eff == l
             sw = float(w_eff[sel].sum())
             if sw < 1e-3 * float(w_eff.sum()):
@@ -210,4 +220,150 @@ def coarse_em(hoods, model, labels0, mu0, sigma0, **kw) -> RefResult:
     return _em_generic(
         hoods, model, np.asarray(labels0), np.asarray(mu0), np.asarray(sigma0),
         mode="coarse", **kw,
+    )
+
+
+def golden_em(
+    hoods: Hoods,
+    model: EnergyModel,
+    labels0,
+    mu0,
+    sigma0,
+    *,
+    max_em_iters: int = 20,
+    max_map_iters: int = 10,
+) -> RefResult:
+    """The golden-oracle EM: a float32 NumPy transcription of the K-ary
+    static-mode driver (DESIGN.md §13).
+
+    Bit-parity design (what makes ``run_em``'s labels reproducible here):
+
+    * all state and arithmetic are float32, never float64 — the trajectory
+      (argmins, votes, convergence windows) follows the engine's precision;
+    * keyed reductions accumulate in **element order** via ``np.add.at``,
+      which matches XLA:CPU's sequential scatter-add order, so per-hood
+      float energy sums agree bitwise with ``jax.ops.segment_sum``;
+    * counts and votes are integer-valued (exact in any order), so argmin
+      and plurality decisions are order-independent;
+    * ``log`` is evaluated in float64 and rounded to float32 (correctly
+      rounded), the closest a NumPy oracle can get to XLA's polynomial —
+      a <=2-ulp energy jitter that discrete decisions absorb.
+
+    The harness (``tests/test_golden.py``) asserts every execution mode x
+    backend x K reproduces this oracle's labels/mu/sigma/iteration counts
+    bit-exactly and its energies to fusion tolerance; the checked-in
+    fixtures are regenerated from this function (``--regenerate-golden``).
+    """
+    f32 = np.float32
+    vertex = np.asarray(hoods.vertex)
+    hood_id = np.asarray(hoods.hood_id)
+    valid = np.asarray(hoods.valid)
+    nh, nr = hoods.n_hoods, hoods.n_regions
+    y_all = np.asarray(model.region_mean, f32)
+    w_all = np.asarray(model.region_weight, f32)
+    beta = f32(model.beta)
+    sig_min = f32(model.sigma_min)
+    reseed_mu = np.asarray(model.reseed_mu, f32)
+    reseed_sigma = f32(model.reseed_sigma)
+    K = int(np.asarray(mu0).shape[0])
+
+    labels = np.asarray(labels0, np.int32).copy()
+    mu = np.asarray(mu0, f32).copy()
+    sigma = np.asarray(sigma0, f32).copy()
+
+    validf = valid.astype(f32)
+    y = y_all[vertex]
+    w = w_all[vertex] * validf
+    seg_h = np.where(valid, hood_id, nh)
+    nall = np.zeros(nh + 1, f32)
+    np.add.at(nall, seg_h, validf)
+    nall_e = nall[hood_id]
+    denom = np.maximum(nall_e - f32(1.0), f32(1.0))
+
+    t0 = time.perf_counter()
+    em_iters = 0
+    map_total = 0
+    hood_e = np.zeros(nh, f32)
+    total_hist = np.zeros(WINDOW + 1, f32)
+
+    for _em in range(max_em_iters):
+        em_iters += 1
+        hist = np.zeros((WINDOW + 1, nh), f32)
+
+        for it in range(max_map_iters):
+            map_total += 1
+            x = labels[vertex]
+            sig = np.maximum(sigma, sig_min)
+            logsig = np.log(sig.astype(np.float64)).astype(f32)
+            cnt = np.zeros((nh + 1) * K, f32)
+            np.add.at(cnt, seg_h * K + x, validf)
+            cnt = cnt.reshape(nh + 1, K)
+            es = []
+            for l in range(K):
+                d = y - mu[l]
+                data = w * (d * d / (f32(2.0) * sig[l] * sig[l]) + logsig[l])
+                eq = (x == l).astype(f32)
+                diff = (nall_e - cnt[hood_id, l]) - (f32(1.0) - eq)
+                es.append(
+                    data + beta * np.maximum(diff, f32(0.0)) / denom * validf
+                )
+            energies = np.stack(es)
+            min_e = energies.min(axis=0)
+            arg = energies.argmin(axis=0).astype(np.int32)
+
+            he = np.zeros(nh + 1, f32)
+            np.add.at(he, seg_h, np.where(valid, min_e, f32(0.0)))
+            hood_e = he[:nh]
+            votes = np.zeros((nr + 1) * K, f32)
+            np.add.at(votes, vertex * K + np.where(valid, arg, 0), validf)
+            labels = votes.reshape(nr + 1, K).argmax(axis=1).astype(np.int32)
+            labels[nr] = 0
+
+            hist = np.roll(hist, 1, axis=0)
+            hist[0] = hood_e
+            if it + 1 > WINDOW:
+                deltas = np.abs(hist[:-1] - hist[1:])
+                scale = np.maximum(np.abs(hist[0]), f32(1.0))
+                if (deltas < f32(CONV_TOL) * scale).all():
+                    break
+
+        # M-step (static-mode segment reduction by label, float32)
+        sw = np.zeros(K, f32)
+        swy = np.zeros(K, f32)
+        swyy = np.zeros(K, f32)
+        np.add.at(sw, labels, w_all)
+        np.add.at(swy, labels, w_all * y_all)
+        np.add.at(swyy, labels, w_all * y_all * y_all)
+        safe = np.maximum(sw, f32(1e-6))
+        mu_n = swy / safe
+        # XLA:CPU contracts `swyy/safe - mu*mu` into an FMA (one rounding);
+        # emulate it exactly: f32 operands are exact in f64, the f64
+        # product and difference are exact, one rounding back to f32.
+        var_fma = (
+            (swyy / safe).astype(np.float64)
+            - mu_n.astype(np.float64) * mu_n.astype(np.float64)
+        ).astype(f32)
+        var = np.maximum(var_fma, f32(0.0))
+        sigma_n = np.maximum(np.sqrt(var), sig_min)
+        dead = sw < f32(1e-3) * sw.sum(dtype=f32)
+        mu = np.where(dead, reseed_mu, mu_n).astype(f32)
+        sigma = np.where(dead, reseed_sigma, sigma_n).astype(f32)
+
+        total = hood_e.sum(dtype=f32)
+        total_hist = np.roll(total_hist, 1)
+        total_hist[0] = total
+        if _em + 1 > WINDOW:
+            deltas = np.abs(total_hist[:-1] - total_hist[1:])
+            scale = np.maximum(np.abs(total_hist[0]), f32(1.0))
+            if (deltas < f32(CONV_TOL) * scale).all():
+                break
+
+    return RefResult(
+        labels=labels,
+        mu=mu,
+        sigma=sigma,
+        em_iters=em_iters,
+        map_iters=map_total,
+        total_energy=float(hood_e.sum(dtype=np.float64)),
+        seconds=time.perf_counter() - t0,
     )

@@ -47,6 +47,41 @@ def porous_ground_truth(
     return (field > thresh).astype(jnp.int32)
 
 
+def _corrupt_base(
+    base: Array,
+    k_g: jax.Array,
+    k_sp: jax.Array,
+    *,
+    gaussian_sigma: float,
+    salt_pepper_frac: float,
+    ringing_amplitude: float,
+    ringing_period: float,
+) -> Array:
+    """The shared corruption stack — ringing + Gaussian noise + salt &
+    pepper + clip — applied to an arbitrary grayscale base image.  Callers
+    supply the noise subkeys so each wrapper's RNG stream stays stable."""
+    h, w = base.shape
+
+    # Ringing artifacts: concentric sinusoids around the volume center
+    # (tomographic reconstruction artifact, paper cites [38]).
+    yy = jnp.arange(h)[:, None] - h / 2.0
+    xx = jnp.arange(w)[None, :] - w / 2.0
+    r = jnp.sqrt(yy ** 2 + xx ** 2)
+    img = base + ringing_amplitude * jnp.sin(2.0 * jnp.pi * r / ringing_period)
+
+    # Additive Gaussian noise.
+    img = img + gaussian_sigma * jax.random.normal(k_g, (h, w))
+
+    # Salt & pepper.
+    u = jax.random.uniform(k_sp, (h, w))
+    salt = u < (salt_pepper_frac / 2.0)
+    pepper = (u >= salt_pepper_frac / 2.0) & (u < salt_pepper_frac)
+    img = jnp.where(salt, 255.0, img)
+    img = jnp.where(pepper, 0.0, img)
+
+    return jnp.clip(img, 0.0, 255.0).astype(jnp.float32)
+
+
 def corrupt(
     key: jax.Array,
     ground_truth: Array,
@@ -63,28 +98,17 @@ def corrupt(
     simple threshold visibly fails while MRF optimization succeeds, matching
     the qualitative setup of paper Fig. 1.
     """
-    k_g, k_sp, k_spv = jax.random.split(key, 3)
-    h, w = ground_truth.shape
+    # Historical 3-way split (third subkey unused) kept so existing seeds
+    # reproduce the same volumes bit-for-bit.
+    k_g, k_sp, _ = jax.random.split(key, 3)
     img = jnp.where(ground_truth > 0, SOLID_LEVEL, VOID_LEVEL)
-
-    # Ringing artifacts: concentric sinusoids around the volume center
-    # (tomographic reconstruction artifact, paper cites [38]).
-    yy = jnp.arange(h)[:, None] - h / 2.0
-    xx = jnp.arange(w)[None, :] - w / 2.0
-    r = jnp.sqrt(yy ** 2 + xx ** 2)
-    img = img + ringing_amplitude * jnp.sin(2.0 * jnp.pi * r / ringing_period)
-
-    # Additive Gaussian noise.
-    img = img + gaussian_sigma * jax.random.normal(k_g, (h, w))
-
-    # Salt & pepper.
-    u = jax.random.uniform(k_sp, (h, w))
-    salt = u < (salt_pepper_frac / 2.0)
-    pepper = (u >= salt_pepper_frac / 2.0) & (u < salt_pepper_frac)
-    img = jnp.where(salt, 255.0, img)
-    img = jnp.where(pepper, 0.0, img)
-
-    return jnp.clip(img, 0.0, 255.0).astype(jnp.float32)
+    return _corrupt_base(
+        img, k_g, k_sp,
+        gaussian_sigma=gaussian_sigma,
+        salt_pepper_frac=salt_pepper_frac,
+        ringing_amplitude=ringing_amplitude,
+        ringing_period=ringing_period,
+    )
 
 
 @dataclass
@@ -112,6 +136,90 @@ def make_synthetic_volume(
         imgs.append(img)
     return SyntheticVolume(
         images=jnp.stack(imgs), ground_truth=jnp.stack(gts)
+    )
+
+
+def kary_ground_truth(
+    key: jax.Array,
+    shape: Tuple[int, int] = (128, 128),
+    n_phases: int = 3,
+    correlation_length: float = 8.0,
+) -> Array:
+    """K-phase (multi-label) ground truth for materials/medical workloads.
+
+    The same smooth Gaussian random field as :func:`porous_ground_truth`,
+    thresholded at K-1 equal-mass quantiles — phase ``p`` is the p-th
+    intensity band of the field, giving connected blobby regions per phase
+    (a multi-phase material microstructure analogue).  ``n_phases=2``
+    reduces to the binary porous structure at porosity 0.5.
+    """
+    if n_phases < 2:
+        raise ValueError(f"n_phases must be >= 2, got {n_phases}")
+    h, w = shape
+    noise = jax.random.normal(key, shape)
+    fy = jnp.fft.fftfreq(h)[:, None]
+    fx = jnp.fft.fftfreq(w)[None, :]
+    lp = jnp.exp(-0.5 * ((fy ** 2 + fx ** 2) * (correlation_length ** 2) * (2 * jnp.pi) ** 2))
+    field = jnp.fft.ifft2(jnp.fft.fft2(noise) * lp).real
+    qs = jnp.quantile(field, jnp.linspace(0.0, 1.0, n_phases + 1)[1:-1])
+    gt = jnp.zeros(shape, jnp.int32)
+    for q in qs:
+        gt = gt + (field > q).astype(jnp.int32)
+    return gt
+
+
+def phase_levels(n_phases: int) -> np.ndarray:
+    """Grayscale level per phase: K levels evenly spread over the same
+    [VOID_LEVEL, SOLID_LEVEL] range as the binary volumes (K=2 reduces to
+    exactly those two levels)."""
+    return np.linspace(VOID_LEVEL, SOLID_LEVEL, n_phases).astype(np.float32)
+
+
+def make_kary_volume(
+    seed: int = 0,
+    n_slices: int = 4,
+    shape: Tuple[int, int] = (128, 128),
+    n_phases: int = 3,
+    **corrupt_kwargs,
+) -> SyntheticVolume:
+    """A K-phase synthetic stack: K-ary ground truth mapped to K grayscale
+    levels, then run through the paper's corruption stack (default noise
+    scaled down so adjacent phases stay separable — K levels divide the
+    same intensity range)."""
+    corrupt_kwargs.setdefault("gaussian_sigma", 120.0 / n_phases)
+    corrupt_kwargs.setdefault("ringing_amplitude", 40.0 / n_phases)
+    levels = jnp.asarray(phase_levels(n_phases))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_slices * 2)
+    gts, imgs = [], []
+    for i in range(n_slices):
+        gt = kary_ground_truth(keys[2 * i], shape, n_phases)
+        base = levels[gt]
+        img = _corrupt_levels(keys[2 * i + 1], base, **corrupt_kwargs)
+        gts.append(gt)
+        imgs.append(img)
+    return SyntheticVolume(images=jnp.stack(imgs), ground_truth=jnp.stack(gts))
+
+
+def _corrupt_levels(
+    key: jax.Array,
+    base: Array,
+    *,
+    gaussian_sigma: float,
+    salt_pepper_frac: float = 0.03,
+    ringing_amplitude: float,
+    ringing_period: float = 9.0,
+) -> Array:
+    """The corruption stack of :func:`corrupt` applied to an arbitrary
+    grayscale base image (rather than a binary one).  The noise levels
+    have no defaults here — :func:`make_kary_volume` owns the K-scaled
+    defaults."""
+    k_g, k_sp = jax.random.split(key, 2)
+    return _corrupt_base(
+        base, k_g, k_sp,
+        gaussian_sigma=gaussian_sigma,
+        salt_pepper_frac=salt_pepper_frac,
+        ringing_amplitude=ringing_amplitude,
+        ringing_period=ringing_period,
     )
 
 

@@ -1,39 +1,41 @@
-"""Pallas TPU kernel: fully-fused MAP iteration inner step.
+"""Pallas TPU kernel: fully-fused K-ary MAP iteration inner step.
 
 The paper's MAP iteration is a chain of DPPs — Map (energy), SortByKey +
 ReduceByKey(Min) (per-element label min), ReduceByKey(Add) (per-hood energy
 sums), Scatter (label votes) — and its own profiling (§4.3.2) pins the
-scaling ceiling on the keyed primitives.  ``mrf_energy.py`` already fuses
-the first two for the binary-label case; this kernel fuses the *entire*
-iteration body into one launch:
+scaling ceiling on the keyed primitives.  This kernel fuses the *entire*
+iteration body into one launch, for any label count K (DESIGN.md §13):
 
-    per element e:   e0, e1   (energy of label 0/1 — registers only)
-                     min_e    = min(e0, e1)
-                     arg      = [e1 < e0]
-    per hood h:      hood_e[h]  = sum_{e in h} min_e[e]          (one-hot dot)
-    per vertex v:    votes1[v]  = sum_{e: vertex[e]=v} arg[e]    (one-hot dot)
+    per element e, label l:  e_l      (energy — registers only)
+    per element e:           min_e    = min_l e_l
+                             arg      = argmin_l e_l  (ties -> lowest l)
+    per hood h:      hood_e[h]   = sum_{e in h} min_e[e]         (one-hot dot)
+    per (l, vertex): votes[l,v]  = #{e: vertex[e]=v, arg[e]=l}   (one-hot dot)
 
-The two keyed reductions run as masked one-hot contractions on the MXU
-(DESIGN.md §3): each value block builds its (S x B) one-hot tile in VMEM
-from an iota comparison and contracts it with the block's values,
-accumulating over the (sequential) value grid dimension.  The (2, H)
-replicated energy array, the per-iteration sort, and the three separate
-segment-reduce launches of the unfused static mode all disappear — per MAP
-iteration only the label-dependent neighborhood count (one segment-sum)
-remains outside this kernel.
+The grid gains a **label dimension**: ``grid = (n_blocks, K)`` with the
+label axis innermost (sequential on TPU), so each value block is revisited
+K times.  Label step l computes e_l from its (1, BLOCK) slice of the
+per-(element, label) neighborhood-count input and its (1,) slices of
+mu/sigma, folds it into the running per-element min/argmin held in the
+revisited output blocks, and the final label step performs the keyed
+reductions as masked one-hot contractions on the MXU — including one vote
+contraction per label into the (K, n_vertices) vote field.  The K=2
+instance computes bit-identical energies, argmins, hood sums, and votes to
+the historical binary kernel (the count rewrite only touches integer-exact
+quantities).
 
 Inputs (all (H,) unless noted):
   y       region mean intensity (pre-gathered per element)
   w       region weight, 0 on padding lanes
-  n1_e    label-1 count of the element's neighborhood
+  cnt_e   (K, H) per-element count of each label in the element's hood
   nall_e  neighborhood size (EM-invariant, hoisted by the caller)
   xf      element's current label as float
   valid   1.0 on real hood elements, 0.0 on padding
   hood_id / vertex  (H,) int32 segment ids for the two reductions
-  mu, sigma  (2,) label parameters; beta  scalar smoothness weight
+  mu, sigma  (K,) label parameters; beta  scalar smoothness weight
 
 Outputs: min_e (H,) f32, arg (H,) i32, hood_e (n_hoods,) f32,
-votes1 (n_vertices,) f32.
+votes (K, n_vertices) f32.
 
 Padding convention matches ``segment_reduce.py``: ids >= the padded segment
 count never match a one-hot row, so lanes masked out by ``valid`` (which
@@ -55,10 +57,12 @@ SEG_ALIGN = 128  # segment-axis padding (MXU lane width)
 
 
 def _kernel(
-    params_ref,
+    beta_ref,
+    mu_ref,
+    sig_ref,
     y_ref,
     w_ref,
-    n1_ref,
+    cnt_ref,
     nall_ref,
     xf_ref,
     valid_ref,
@@ -68,18 +72,19 @@ def _kernel(
     arg_ref,
     hood_e_ref,
     votes_ref,
+    *,
+    n_labels: int,
 ):
     i_v = pl.program_id(0)
+    l = pl.program_id(1)      # label grid dimension (innermost, sequential)
 
-    mu0 = params_ref[0]
-    mu1 = params_ref[1]
-    sig0 = params_ref[2]
-    sig1 = params_ref[3]
-    beta = params_ref[4]
+    beta = beta_ref[0]
+    mu_l = mu_ref[0]
+    sig_l = sig_ref[0]
 
     y = y_ref[...]
     w = w_ref[...]
-    n1 = n1_ref[...]
+    cnt = cnt_ref[0, :]
     nall = nall_ref[...]
     xf = xf_ref[...]
     valid = valid_ref[...]
@@ -87,40 +92,54 @@ def _kernel(
     # Energy expressions mirror energy.label_energies exactly (same op
     # order) so the per-element argmin is bit-identical to the static mode.
     denom = jnp.maximum(nall - 1.0, 1.0)
-    d0 = y - mu0
-    e0 = w * (d0 * d0 / (2.0 * sig0 * sig0) + jnp.log(sig0)) + beta * jnp.maximum(
-        n1 - xf, 0.0
-    ) / denom * valid
-    d1 = y - mu1
-    e1 = w * (d1 * d1 / (2.0 * sig1 * sig1) + jnp.log(sig1)) + beta * jnp.maximum(
-        (nall - n1) - (1.0 - xf), 0.0
+    d = y - mu_l
+    eq = (xf == l.astype(jnp.float32)).astype(jnp.float32)
+    e = w * (d * d / (2.0 * sig_l * sig_l) + jnp.log(sig_l)) + beta * jnp.maximum(
+        (nall - cnt) - (1.0 - eq), 0.0
     ) / denom * valid
 
-    min_e = jnp.minimum(e0, e1)
-    argf = (e1 < e0).astype(jnp.float32)
-    min_ref[...] = min_e
-    arg_ref[...] = argf.astype(jnp.int32)
+    # Running per-element min/argmin across the label grid steps (the
+    # min/arg blocks are revisited: same block index for every l).
+    @pl.when(l == 0)
+    def _first_label():
+        min_ref[...] = e
+        arg_ref[...] = jnp.zeros_like(arg_ref)
 
-    @pl.when(i_v == 0)
+    @pl.when(l > 0)
+    def _fold_label():
+        prev = min_ref[...]
+        take = e < prev                       # strict: ties keep lowest l
+        min_ref[...] = jnp.where(take, e, prev)
+        arg_ref[...] = jnp.where(take, l, arg_ref[...]).astype(jnp.int32)
+
+    @pl.when((i_v == 0) & (l == 0))
     def _init():
         hood_e_ref[...] = jnp.zeros_like(hood_e_ref)
         votes_ref[...] = jnp.zeros_like(votes_ref)
 
-    # Keyed reductions as one-hot contractions (MXU).  The grid's value
-    # dimension is sequential on TPU, so += accumulation is safe.
-    s_rows = hood_e_ref.shape[0]
-    rows_h = jax.lax.broadcasted_iota(jnp.int32, (s_rows, BLOCK), 0)
-    onehot_h = (rows_h == hood_ref[...][None, :]).astype(jnp.float32)
-    hood_e_ref[...] += jnp.dot(
-        onehot_h, min_e * valid, preferred_element_type=jnp.float32
-    )
+    # Keyed reductions as one-hot contractions (MXU) at the final label
+    # step, when the block's min/arg are complete.  The grid's value and
+    # label dimensions are sequential on TPU, so += accumulation is safe.
+    @pl.when(l == n_labels - 1)
+    def _reduce():
+        min_e = min_ref[...]
+        arg = arg_ref[...]
 
-    v_rows = votes_ref.shape[0]
-    rows_v = jax.lax.broadcasted_iota(jnp.int32, (v_rows, BLOCK), 0)
-    onehot_v = (rows_v == vert_ref[...][None, :]).astype(jnp.float32)
-    votes_ref[...] += jnp.dot(
-        onehot_v, argf * valid, preferred_element_type=jnp.float32
-    )
+        s_rows = hood_e_ref.shape[0]
+        rows_h = jax.lax.broadcasted_iota(jnp.int32, (s_rows, BLOCK), 0)
+        onehot_h = (rows_h == hood_ref[...][None, :]).astype(jnp.float32)
+        hood_e_ref[...] += jnp.dot(
+            onehot_h, min_e * valid, preferred_element_type=jnp.float32
+        )
+
+        v_rows = votes_ref.shape[1]
+        rows_v = jax.lax.broadcasted_iota(jnp.int32, (v_rows, BLOCK), 0)
+        onehot_v = (rows_v == vert_ref[...][None, :]).astype(jnp.float32)
+        for l2 in range(n_labels):
+            sel = (arg == l2).astype(jnp.float32) * valid
+            votes_ref[l2, :] += jnp.dot(
+                onehot_v, sel, preferred_element_type=jnp.float32
+            )
 
 
 @functools.partial(
@@ -129,7 +148,7 @@ def _kernel(
 def fused_map_step_pallas(
     y: jax.Array,
     w: jax.Array,
-    n1_e: jax.Array,
+    cnt_e: jax.Array,
     nall_e: jax.Array,
     xf: jax.Array,
     valid: jax.Array,
@@ -143,9 +162,10 @@ def fused_map_step_pallas(
     n_vertices: int,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One fused launch for the whole static-mode MAP iteration body."""
+    """One fused launch for the whole static-mode K-ary MAP iteration body."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    n_labels = int(mu.shape[0])
     n = y.shape[0]
     n_pad = -(-n // BLOCK) * BLOCK
     s_pad = -(-n_hoods // SEG_ALIGN) * SEG_ALIGN
@@ -159,42 +179,47 @@ def fused_map_step_pallas(
             x.astype(jnp.int32)
         )
 
-    params = jnp.stack(
-        [mu[0], mu[1], sigma[0], sigma[1], jnp.asarray(beta, jnp.float32)]
-    ).astype(jnp.float32)
+    cnt_pad = jnp.zeros((n_labels, n_pad), jnp.float32).at[:, :n].set(
+        cnt_e.astype(jnp.float32)
+    )
 
+    blockspec_e = pl.BlockSpec((BLOCK,), lambda i, l: (i,))
     min_e, arg, hood_e, votes = pl.pallas_call(
-        _kernel,
-        grid=(n_pad // BLOCK,),
+        functools.partial(_kernel, n_labels=n_labels),
+        grid=(n_pad // BLOCK, n_labels),
         in_specs=[
-            pl.BlockSpec((5,), lambda i: (0,)),  # broadcast scalar params
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i, l: (0,)),       # beta
+            pl.BlockSpec((1,), lambda i, l: (l,)),       # mu[l]
+            pl.BlockSpec((1,), lambda i, l: (l,)),       # sigma[l]
+            blockspec_e,                                 # y
+            blockspec_e,                                 # w
+            pl.BlockSpec((1, BLOCK), lambda i, l: (l, i)),  # cnt_e[l]
+            blockspec_e,                                 # nall_e
+            blockspec_e,                                 # xf
+            blockspec_e,                                 # valid
+            blockspec_e,                                 # hood_id
+            blockspec_e,                                 # vertex
         ],
         out_specs=[
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((s_pad,), lambda i: (0,)),  # accumulated over grid
-            pl.BlockSpec((r_pad,), lambda i: (0,)),  # accumulated over grid
+            blockspec_e,                                 # min_e (revisited)
+            blockspec_e,                                 # arg (revisited)
+            pl.BlockSpec((s_pad,), lambda i, l: (0,)),   # accumulated
+            pl.BlockSpec((n_labels, r_pad), lambda i, l: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_pad,), jnp.float32),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
             jax.ShapeDtypeStruct((s_pad,), jnp.float32),
-            jax.ShapeDtypeStruct((r_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_labels, r_pad), jnp.float32),
         ],
         interpret=interpret,
     )(
-        params,
+        jnp.asarray(beta, jnp.float32).reshape(1),
+        mu.astype(jnp.float32),
+        sigma.astype(jnp.float32),
         padf(y),
         padf(w),
-        padf(n1_e),
+        cnt_pad,
         padf(nall_e),
         padf(xf),
         padf(valid),
@@ -202,4 +227,4 @@ def fused_map_step_pallas(
         padi(vertex),
     )
 
-    return min_e[:n], arg[:n], hood_e[:n_hoods], votes[:n_vertices]
+    return min_e[:n], arg[:n], hood_e[:n_hoods], votes[:, :n_vertices]

@@ -192,17 +192,17 @@ register("fused_map_step", "xla")(ref.fused_map_step)
 
 
 @register("fused_map_step", "pallas-tpu")
-def _fused_map_step_tpu(y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
+def _fused_map_step_tpu(y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
     return fused_map_step_pallas(
-        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
         n_hoods=n_hoods, n_vertices=n_vertices, interpret=False,
     )
 
 
 @register("fused_map_step", "pallas-interpret")
-def _fused_map_step_interp(y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
+def _fused_map_step_interp(y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta, *, n_hoods, n_vertices):
     return fused_map_step_pallas(
-        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
         n_hoods=n_hoods, n_vertices=n_vertices, interpret=True,
     )
 
@@ -210,7 +210,7 @@ def _fused_map_step_interp(y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, s
 def fused_map_step(
     y: Array,
     w: Array,
-    n1_e: Array,
+    cnt_e: Array,
     nall_e: Array,
     xf: Array,
     valid: Array,
@@ -224,7 +224,12 @@ def fused_map_step(
     n_vertices: int,
     backend: Optional[str] = None,
 ) -> Tuple[Array, Array, Array, Array]:
-    """Fused MAP step: (min_e, arg, hood_energy_sums, label1_votes)."""
+    """Fused K-ary MAP step: (min_e, arg, hood_energy_sums, votes).
+
+    ``cnt_e`` is (K, H) — each label's per-element neighborhood count —
+    and ``mu``/``sigma`` are (K,); ``votes`` comes back (K, n_vertices)
+    (DESIGN.md §13).
+    """
     requested = backend
     backend = resolve_backend(backend)
     if backend != "xla":
@@ -247,7 +252,7 @@ def fused_map_step(
                 )
             backend = "xla"
     return _dispatch("fused_map_step", backend)(
-        y, w, n1_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
+        y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
         n_hoods=n_hoods, n_vertices=n_vertices,
     )
 

@@ -62,7 +62,7 @@ def mrf_min_energy(
 def fused_map_step(
     y: Array,
     w: Array,
-    n1_e: Array,
+    cnt_e: Array,
     nall_e: Array,
     xf: Array,
     valid: Array,
@@ -75,32 +75,47 @@ def fused_map_step(
     n_hoods: int,
     n_vertices: int,
 ) -> Tuple[Array, Array, Array, Array]:
-    """Oracle for the fused MAP-iteration kernel (``map_step.py``).
+    """Oracle for the fused K-ary MAP-iteration kernel (``map_step.py``).
 
     Same energy expressions as ``energy.label_energies`` (identical op
-    order, so argmins agree bitwise), followed by the two keyed reductions
-    the kernel performs as one-hot contractions: the per-hood energy sum
-    and the per-vertex label-1 vote count.  ``valid`` masks padding lanes.
+    order, so argmins agree bitwise), followed by the keyed reductions the
+    kernel performs as one-hot contractions: the per-hood energy sum and
+    the per-(label, vertex) vote counts.  ``cnt_e`` is the (K, H) gathered
+    per-element neighborhood label-count matrix and ``mu``/``sigma`` are
+    (K,); ``valid`` masks padding lanes.  Returns
+    (min_e, arg, hood_e, votes) with ``votes`` shaped (K, n_vertices).
     """
+    n_labels = int(mu.shape[0])
     denom = jnp.maximum(nall_e - 1.0, 1.0)
-    d0 = y - mu[0]
-    e0 = w * (d0 * d0 / (2.0 * sigma[0] * sigma[0]) + jnp.log(sigma[0]))
-    e0 = e0 + beta * jnp.maximum(n1_e - xf, 0.0) / denom * valid
-    d1 = y - mu[1]
-    e1 = w * (d1 * d1 / (2.0 * sigma[1] * sigma[1]) + jnp.log(sigma[1]))
-    e1 = e1 + beta * jnp.maximum((nall_e - n1_e) - (1.0 - xf), 0.0) / denom * valid
+    es = []
+    for l in range(n_labels):
+        d = y - mu[l]
+        e = w * (d * d / (2.0 * sigma[l] * sigma[l]) + jnp.log(sigma[l]))
+        eq = (xf == l).astype(jnp.float32)
+        e = e + beta * jnp.maximum(
+            (nall_e - cnt_e[l]) - (1.0 - eq), 0.0
+        ) / denom * valid
+        es.append(e)
+    energies = jnp.stack(es)
 
-    min_e = jnp.minimum(e0, e1)
-    arg = (e1 < e0).astype(jnp.int32)
+    min_e = jnp.min(energies, axis=0)
+    arg = jnp.argmin(energies, axis=0).astype(jnp.int32)
     seg_h = jnp.where(valid > 0, hood_id, n_hoods).astype(jnp.int32)
     seg_v = jnp.where(valid > 0, vertex, n_vertices).astype(jnp.int32)
     hood_e = jax.ops.segment_sum(
         min_e * valid, seg_h, num_segments=n_hoods + 1
     )[:n_hoods]
-    votes1 = jax.ops.segment_sum(
-        arg.astype(jnp.float32) * valid, seg_v, num_segments=n_vertices + 1
-    )[:n_vertices]
-    return min_e, arg, hood_e, votes1
+    votes = jnp.stack(
+        [
+            jax.ops.segment_sum(
+                (arg == l).astype(jnp.float32) * valid,
+                seg_v,
+                num_segments=n_vertices + 1,
+            )[:n_vertices]
+            for l in range(n_labels)
+        ]
+    )
+    return min_e, arg, hood_e, votes
 
 
 def flash_attention(

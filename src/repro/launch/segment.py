@@ -41,6 +41,12 @@ def main() -> None:
         "--mode", choices=("static", "faithful", "static-pallas"), default="static"
     )
     ap.add_argument(
+        "--labels", type=int, default=2, metavar="K",
+        help="label count K (K-ary multi-label segmentation, DESIGN.md §13); "
+        "K>2 generates a K-phase synthetic volume and reports multi-class "
+        "accuracy",
+    )
+    ap.add_argument(
         "--backend",
         choices=("auto", "xla", "pallas-tpu", "pallas-interpret"),
         default="auto",
@@ -77,7 +83,17 @@ def main() -> None:
     from repro.core import metrics as M
     from repro.core import synthetic as S
 
-    if args.dataset == "synthetic":
+    if args.labels > 2 and args.dataset == "experimental":
+        ap.error(
+            "--labels K>2 generates its own K-phase volume and cannot be "
+            "combined with --dataset experimental"
+        )
+    if args.labels > 2:
+        vol = S.make_kary_volume(
+            seed=args.seed, n_slices=args.slices, shape=(args.size, args.size),
+            n_phases=args.labels,
+        )
+    elif args.dataset == "synthetic":
         vol = S.make_synthetic_volume(
             seed=args.seed, n_slices=args.slices, shape=(args.size, args.size)
         )
@@ -94,6 +110,7 @@ def main() -> None:
             init=args.init,
             overseg_grid=(args.grid, args.grid),
             shards=args.shards,
+            n_labels=args.labels,
         )
     )
 
@@ -114,7 +131,10 @@ def main() -> None:
     per_slice = []
     for i, res in enumerate(results):
         gt = np.asarray(vol.ground_truth[i])
-        m = M.evaluate(res.segmentation, gt).as_dict()
+        if args.labels > 2:
+            m = {"accuracy": M.multiclass_accuracy(res.segmentation, gt, args.labels)}
+        else:
+            m = M.evaluate(res.segmentation, gt).as_dict()
         per_slice.append(
             {
                 "slice": i,
@@ -132,6 +152,7 @@ def main() -> None:
     print(json.dumps({
         "mean_accuracy": round(acc, 4),
         "mean_optimize_s": round(opt, 3),
+        "labels": args.labels,
         "backend": sess.config.resolved_backend(),
         "shards": sess.config.shards,
         "executables_cached": len(sess.cache_keys),

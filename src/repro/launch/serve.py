@@ -39,6 +39,9 @@ def main() -> None:
                     choices=("auto", "xla", "pallas-tpu", "pallas-interpret"))
     ap.add_argument("--mode", default="static",
                     choices=("faithful", "static", "static-pallas"))
+    ap.add_argument("--labels", type=int, default=2, metavar="K",
+                    help="label count K; K>2 serves a K-phase synthetic "
+                         "stream through the same pool (DESIGN.md §13)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--deadline-spread", type=float, default=0.0,
                     help="stagger request deadlines over this many seconds "
@@ -53,12 +56,19 @@ def main() -> None:
     cfg = api.ExecutionConfig(
         backend=args.backend, mode=args.mode,
         overseg_grid=(args.grid, args.grid), capacity_bucket=4096,
+        n_labels=args.labels,
     )
     sess = api.Segmenter(cfg)
 
-    vol = synthetic.make_synthetic_volume(
-        seed=args.seed, n_slices=args.requests, shape=(args.shape, args.shape)
-    )
+    if args.labels > 2:
+        vol = synthetic.make_kary_volume(
+            seed=args.seed, n_slices=args.requests,
+            shape=(args.shape, args.shape), n_phases=args.labels,
+        )
+    else:
+        vol = synthetic.make_synthetic_volume(
+            seed=args.seed, n_slices=args.requests, shape=(args.shape, args.shape)
+        )
     imgs = [np.asarray(im) for im in vol.images]
     plans = [sess.plan(img) for img in imgs]
 
@@ -78,6 +88,7 @@ def main() -> None:
     lat = np.array([c.latency_s for c in completions])
     report = {
         "requests": len(completions),
+        "labels": args.labels,
         "max_batch": args.max_batch,
         "tick_iters": args.tick_iters,
         "bucket": list(engine.bucket),

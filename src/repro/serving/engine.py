@@ -23,6 +23,11 @@ Per-request results are bit-identical to serial ``run_em`` in every
 label-visible output (labels, segmentation, mu, sigma, iteration counts);
 energies agree to float-reduction tolerance (DESIGN.md §12 — the same
 fusion-context caveat as faithful-vs-static mode parity).
+
+Mixed-K traffic (DESIGN.md §13): the pool is compiled at the session's
+``n_labels``; requests with fewer labels are admitted by label-padding
+their lanes with inert sentinel labels (bitwise natural-K trajectories),
+requests with more labels are rejected at ``submit``.
 """
 
 from __future__ import annotations
@@ -155,6 +160,14 @@ class SegmentationEngine:
             raise ValueError(
                 f"request bucket {tuple(plan.bucket)} exceeds the engine's "
                 f"fixed pool bucket {tuple(self.bucket)}"
+            )
+        plan_labels = plan.problem.model.n_labels
+        if plan_labels > self.session.config.n_labels:
+            raise ValueError(
+                f"request has {plan_labels} labels but the pool serves "
+                f"n_labels={self.session.config.n_labels}; smaller-K "
+                "requests are label-padded with inert labels, larger-K "
+                "need a wider pool (DESIGN.md §13)"
             )
         if rid is None:
             while self._auto_rid in self._live_rids:

@@ -15,6 +15,22 @@ truly cold jit cache (cold-compile timing) clear it themselves.
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regenerate-golden",
+        action="store_true",
+        default=False,
+        help="rewrite tests/golden/ fixtures from the NumPy golden oracle "
+        "(reference.golden_em) instead of asserting against them; the CI "
+        "drift gate runs this and requires an empty git diff",
+    )
+
+
+@pytest.fixture(scope="session")
+def regenerate_golden(request):
+    return request.config.getoption("--regenerate-golden")
+
+
 @pytest.fixture(autouse=True)
 def _reset_global_session_state():
     from repro import api

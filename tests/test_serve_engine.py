@@ -151,6 +151,48 @@ def test_deadline_ordered_admission():
         assert c.ticks_resident >= 1
 
 
+def test_mixed_k_requests_share_one_pool():
+    """DESIGN.md §13: a K=3 pool serves K=2 and K=3 requests together.
+    Smaller-K plans are label-padded with inert sentinel labels, so each
+    lane's real labels take the bitwise natural-K trajectory — the K=2
+    request must reproduce a *K=2 session's* serial result exactly."""
+    vol2 = synthetic.make_synthetic_volume(seed=5, n_slices=1, shape=(44, 44))
+    vol3 = synthetic.make_kary_volume(
+        seed=5, n_slices=1, shape=(44, 44), n_phases=3
+    )
+    sess2 = _session(init="quantile")
+    sess3 = _session(n_labels=3, init="quantile")
+    plan2 = sess2.plan(np.asarray(vol2.images[0]))
+    plan3 = sess3.plan(np.asarray(vol3.images[0]))
+    want2 = sess2.execute(plan2, seed=0)       # natural-K serial references
+    want3 = sess3.execute(plan3, seed=0)
+
+    engine = SegmentationEngine(sess3, max_batch=2, tick_iters=4)
+    engine.submit(plan2, rid=2, seed=0)        # K=2 request in the K=3 pool
+    engine.submit(plan3, rid=3, seed=0)
+    completions = {c.rid: c for c in engine.run()}
+    assert sorted(completions) == [2, 3]
+
+    got2 = completions[2].result
+    np.testing.assert_array_equal(got2.region_labels, want2.region_labels)
+    np.testing.assert_array_equal(got2.segmentation, want2.segmentation)
+    assert got2.em_iters == want2.em_iters
+    assert got2.map_iters == want2.map_iters
+    # real labels' parameters are bitwise the K=2 run; the inert padded
+    # label re-seeds to the sentinel every M-step
+    np.testing.assert_array_equal(got2.mu[:2], want2.mu)
+    np.testing.assert_array_equal(got2.sigma[:2], want2.sigma)
+    from repro.core.pmrf import energy as energy_mod
+
+    assert got2.mu[2] == energy_mod.INERT_MU
+    _assert_matches_serial(completions[3], want3)
+
+    # larger-K requests need a wider pool: loud failure
+    engine2 = SegmentationEngine(sess2, max_batch=1)
+    with pytest.raises(ValueError, match="wider pool"):
+        engine2.submit(plan3)
+
+
 def test_engine_rejects_oversized_and_sharded():
     sess = _session()
     plans = _mixed_plans(sess, n=1)

@@ -36,7 +36,7 @@ requires_8_devices = pytest.mark.skipif(
 )
 
 
-def _problem(shape=(48, 48), grid=(6, 6), seed=0):
+def _problem(shape=(40, 40), grid=(6, 6), seed=0):
     vol = synthetic.make_synthetic_volume(seed=seed, n_slices=1, shape=shape)
     problem = initialize(np.asarray(vol.images[0]), overseg_grid=grid)
     labels0, mu0, sigma0 = em_mod.init_params(
@@ -153,6 +153,27 @@ def test_distributed_em_matches_single_device(mode):
     )
     assert int(ref.em_iters) == int(dist.em_iters)
     assert int(ref.map_iters) == int(dist.map_iters)
+
+
+@pytest.mark.parametrize("mode", ["faithful", "static", "static-pallas"])
+def test_distributed_em_matches_single_device_kary(mode):
+    """K>2 under shard_map: the collective hooks carry the K-widened key
+    spaces (counts, votes) across shards bit-exactly (DESIGN.md §13)."""
+    vol = synthetic.make_kary_volume(seed=1, n_slices=1, shape=(40, 40), n_phases=3)
+    problem = initialize(
+        np.asarray(vol.images[0]), overseg_grid=(6, 6), n_labels=3
+    )
+    labels0, mu0, sigma0 = em_mod.quantile_init(
+        problem.graph.region_mean, problem.graph.n_regions, 3
+    )
+    config = EMConfig(mode=mode)
+    ref = em_mod.run_em(problem.hoods, problem.model, labels0, mu0, sigma0, config)
+    dist = distributed_em(
+        problem.hoods, problem.model, labels0, mu0, sigma0, _mesh(), "data", config
+    )
+    np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(dist.labels))
+    np.testing.assert_array_equal(np.asarray(ref.mu), np.asarray(dist.mu))
+    assert int(ref.em_iters) == int(dist.em_iters)
 
 
 @requires_8_devices
