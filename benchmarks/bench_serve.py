@@ -20,6 +20,12 @@ Emits ``BENCH_serve.json`` with wall/throughput/latency percentiles per
 path.  The acceptance target of the serving PR: ``continuous8`` at or
 above serial throughput on CPU (lockstep sits well below), with
 per-request labels bit-identical to serial ``run_em``.
+
+A fault-rate sweep (0% / 5% / 20% poisoned requests via the chaos
+harness's ``bad_init`` class, DESIGN.md §14) measures healthy-lane
+throughput retention: poisoned lanes diverge at their first EM boundary
+and are quarantined, so the healthy stream's throughput must stay within
+10% of the clean run (the fault-tolerance PR's acceptance target at 5%).
 """
 
 from __future__ import annotations
@@ -36,6 +42,7 @@ from repro import api
 from repro.core import synthetic
 from repro.core.pmrf import em as em_mod
 from repro.serving import SegmentationEngine
+from repro.testing import chaos as chaos_mod
 
 OUT_PATH = pathlib.Path("BENCH_serve.json")
 N_REQUESTS = 24
@@ -43,6 +50,7 @@ SLOTS = 8
 TICK_ITERS = 8
 SHAPE = (96, 96)
 GRID = (12, 12)
+POISON_RATES = (0.05, 0.20)
 
 
 def _percentiles(lat):
@@ -115,6 +123,49 @@ def run() -> dict:
         for c in completions
     )
 
+    # -- fault-rate sweep: healthy-lane throughput retention. --------------
+    # 0% is the continuous run above; 5% / 20% poison deterministic rids
+    # with the bad_init fault (NaN mu0 -> quarantined as `diverged` at the
+    # first EM boundary).  Retention compares healthy completions/sec
+    # against the clean run's total throughput.
+    clean_rps = N_REQUESTS / continuous_wall
+    fault_sweep = {
+        "poison_0pct": {
+            "poisoned_rids": [],
+            "wall_s": round(continuous_wall, 4),
+            "healthy_rps": round(clean_rps, 3),
+            "healthy_retention": 1.0,
+        }
+    }
+    for rate in POISON_RATES:
+        k = max(1, round(N_REQUESTS * rate))
+        rids = tuple(range(0, N_REQUESTS, max(1, N_REQUESTS // k)))[:k]
+        eng = SegmentationEngine(
+            sess, max_batch=SLOTS, tick_iters=TICK_ITERS, bucket=bucket
+        )
+        with chaos_mod.inject(chaos_mod.ChaosConfig(seed=1, bad_init_rids=rids)):
+            t0 = time.perf_counter()
+            for rid, p in enumerate(plans):
+                eng.submit(p, rid=rid)
+            comps = eng.run()
+            wall = time.perf_counter() - t0
+        healthy = [c for c in comps if c.rid not in rids]
+        quarantined = [c for c in comps if c.rid in rids]
+        healthy_rps = len(healthy) / wall
+        fault_sweep[f"poison_{round(rate * 100)}pct"] = {
+            "poisoned_rids": list(rids),
+            "wall_s": round(wall, 4),
+            "healthy_rps": round(healthy_rps, 3),
+            "healthy_retention": round(healthy_rps / clean_rps, 3),
+            "quarantined": sum(1 for c in quarantined if c.status == "diverged"),
+            "healthy_identical_to_serial": all(
+                np.array_equal(
+                    c.result.region_labels, serial_results[c.rid].region_labels
+                )
+                for c in healthy
+            ),
+        }
+
     em_iters = [r.em_iters for r in serial_results]
     return {
         "n_requests": N_REQUESTS,
@@ -147,6 +198,7 @@ def run() -> dict:
         "lockstep_vs_serial_x": round(serial_wall / lockstep_wall, 2),
         "continuous_vs_serial_x": round(serial_wall / continuous_wall, 2),
         "labels_identical_to_serial": bool(identical),
+        "fault_sweep": fault_sweep,
         "trace_counts": dict(em_mod.TRACE_COUNTS),
     }
 
@@ -165,6 +217,20 @@ def main() -> None:
     )
     assert result["labels_identical_to_serial"], (
         "continuous serving must be bit-identical to serial run_em"
+    )
+    sweep = result["fault_sweep"]
+    print_csv(
+        "fault sweep: healthy-lane throughput retention",
+        ["rate", "healthy_rps", "retention", "quarantined"],
+        [(name, row["healthy_rps"], row["healthy_retention"],
+          row.get("quarantined", 0)) for name, row in sweep.items()],
+    )
+    assert sweep["poison_5pct"]["healthy_retention"] >= 0.9, (
+        "healthy-lane throughput must retain >= 90% under 5% poison, got "
+        f"{sweep['poison_5pct']['healthy_retention']}"
+    )
+    assert sweep["poison_5pct"]["healthy_identical_to_serial"], (
+        "healthy lanes must stay bit-identical to serial under poison"
     )
 
 

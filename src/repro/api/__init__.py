@@ -22,7 +22,13 @@ The legacy one-shot functions (``repro.core.pmrf.pipeline.segment_image`` /
 ``segment_volume``) are deprecation shims over :func:`session_for`.
 """
 
-from repro.api.config import ExecutionConfig
+from repro.api.config import ExecutionConfig, FallbackPolicy
+from repro.api.errors import (
+    FallbackError,
+    PlanError,
+    RequestError,
+    ServingError,
+)
 from repro.api.session import (
     BucketKey,
     CacheStats,
@@ -41,7 +47,12 @@ __all__ = [
     "Executable",
     "ExecutableKey",
     "ExecutionConfig",
+    "FallbackError",
+    "FallbackPolicy",
     "Plan",
+    "PlanError",
+    "RequestError",
+    "ServingError",
     "Segmenter",
     "default_session",
     "reset_sessions",

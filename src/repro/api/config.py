@@ -41,6 +41,41 @@ DEFAULT_SEGMENT_BUCKET = 64
 
 
 @dataclass(frozen=True)
+class FallbackPolicy:
+    """Graceful degradation for compile/execute failures (DESIGN.md §14).
+
+    When a compile or execute raises, the session first retries the same
+    backend up to ``max_retries`` times with capped exponential backoff
+    (transient-error cover: allocator pressure, interpreter hiccups),
+    then — if ``enabled`` and the failing backend differs from
+    ``backend`` — recompiles on the fallback backend.  Fallback
+    executables get their own :class:`~repro.api.session.ExecutableKey`
+    (the key pins the resolved backend), and the session remembers the
+    redirect, so warm traffic routes straight to the fallback executable
+    without re-attempting the broken compile.
+
+    Frozen + hashable: rides on :class:`ExecutionConfig`, which keys the
+    session registry and the executable cache.
+    """
+
+    enabled: bool = True
+    backend: str = "xla"       # the universally-available lowering
+    max_retries: int = 1       # same-backend retries before falling back
+    backoff_s: float = 0.05    # initial backoff, doubled per retry
+    max_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        if self.backend not in kops.BACKENDS:
+            raise ValueError(
+                f"unknown fallback backend {self.backend!r}; have {kops.BACKENDS}"
+            )
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff seconds must be >= 0")
+
+
+@dataclass(frozen=True)
 class ExecutionConfig:
     """Every knob that selects *how* a segmentation problem executes.
 
@@ -91,6 +126,9 @@ class ExecutionConfig:
     segment_bucket: int = DEFAULT_SEGMENT_BUCKET
     max_cached_executables: int = 32
 
+    # --- fault tolerance (DESIGN.md §14) -------------------------------
+    fallback: FallbackPolicy = FallbackPolicy()
+
     def __post_init__(self):
         if self.mode not in em_mod.MODES:
             raise ValueError(f"unknown mode {self.mode!r}; have {em_mod.MODES}")
@@ -111,6 +149,10 @@ class ExecutionConfig:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
         if not self.mesh_axis or not isinstance(self.mesh_axis, str):
             raise ValueError(f"mesh_axis must be a non-empty string, got {self.mesh_axis!r}")
+        if not isinstance(self.fallback, FallbackPolicy):
+            raise ValueError(
+                f"fallback must be a FallbackPolicy, got {type(self.fallback).__name__}"
+            )
         # Tuples survive hashing; coerce list input once at construction.
         object.__setattr__(self, "overseg_grid", tuple(self.overseg_grid))
 
@@ -118,17 +160,19 @@ class ExecutionConfig:
         """Concrete backend name after the full resolution order."""
         return kops.resolve_backend(self.backend)
 
-    def em_config(self) -> em_mod.EMConfig:
+    def em_config(self, backend: str | None = None) -> em_mod.EMConfig:
         """The inner-loop config, with the backend resolved *now* so the
         resulting trace is pinned to a concrete lowering (cache-key
-        stability — see module docstring)."""
+        stability — see module docstring).  ``backend`` overrides the
+        resolved name — the fallback-compile path (DESIGN.md §14) uses it
+        to pin the fallback lowering."""
         return em_mod.EMConfig(
             max_em_iters=self.max_em_iters,
             max_map_iters=self.max_map_iters,
             mode=self.mode,
             beta=self.beta,
             sigma_min=self.sigma_min,
-            backend=self.resolved_backend(),
+            backend=backend if backend is not None else self.resolved_backend(),
         )
 
     def with_(self, **changes) -> "ExecutionConfig":

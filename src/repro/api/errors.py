@@ -1,0 +1,38 @@
+"""Typed exceptions for the session API and serving engine (DESIGN.md §14).
+
+The fault-tolerance contract separates three failure surfaces:
+
+* **planning faults** (:class:`PlanError`) — the input image itself is
+  unusable (non-finite pixels, zero elements).  Raised by
+  ``Segmenter.plan`` before any device work, so a poison image costs one
+  host-side scan, never a compile or a pool slot.
+* **request faults** (:class:`RequestError`) — a prepared :class:`Plan`
+  fails the serving engine's admission validation (non-finite model
+  statistics, label counts beyond the pool's K, bucket overflow).  Raised
+  by ``SegmentationEngine.submit``; the request never enters the queue.
+* **fallback exhaustion** (:class:`FallbackError`) — a compile or execute
+  failed, the :class:`~repro.api.config.FallbackPolicy` retries were
+  spent, and the fallback backend also failed (or fallback is disabled).
+  Carries the original exception as ``__cause__``.
+
+Both request-surface errors subclass :class:`ValueError` so existing
+``except ValueError`` callers (and tests) keep working.
+"""
+
+from __future__ import annotations
+
+
+class ServingError(Exception):
+    """Base class for session/serving fault-tolerance errors."""
+
+
+class PlanError(ServingError, ValueError):
+    """The input image cannot be planned (non-finite or empty)."""
+
+
+class RequestError(ServingError, ValueError):
+    """A request failed admission validation at ``submit``."""
+
+
+class FallbackError(ServingError, RuntimeError):
+    """Compile/execute failed and the fallback policy could not recover."""

@@ -28,6 +28,7 @@ performance layer, never a semantics layer.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
@@ -38,11 +39,13 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.api.config import ExecutionConfig
+from repro.api.errors import FallbackError, PlanError
 from repro.core.pmrf import distributed as distributed_mod
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import energy as energy_mod
 from repro.core.pmrf import pipeline as pipeline_mod
 from repro.core.pmrf.hoods import Hoods, pad_hoods
+from repro.testing import chaos as chaos_mod
 
 Array = jax.Array
 
@@ -209,6 +212,7 @@ def _abstract_tick_state(bucket: BucketKey, batch: int, n_labels: int = 2):
         em_i=arr((), jnp.int32),
         map_total=arr((), jnp.int32),
         done=arr((), jnp.bool_),
+        status=arr((), jnp.int32),
     )
 
 
@@ -232,6 +236,12 @@ class Segmenter:
         self._cache: "OrderedDict[ExecutableKey, Executable]" = OrderedDict()
         self._pending: List[_Pending] = []
         self.stats = CacheStats()
+        # Fallback bookkeeping (DESIGN.md §14): once a key's compile fails
+        # over to the fallback backend, warm traffic for the original key
+        # routes straight to the fallback executable — the broken compile
+        # is never re-attempted inside this session.
+        self._fallback_redirects: Dict[ExecutableKey, ExecutableKey] = {}
+        self.fallback_events: List[Dict] = []
 
     # ------------------------------------------------------------------
     # phase 1: plan
@@ -247,8 +257,24 @@ class Segmenter:
         )
 
     def plan(self, image, *, oversegmentation=None) -> Plan:
-        """Initialization phase (paper Alg. 2 lines 1-5) + bucket assignment."""
+        """Initialization phase (paper Alg. 2 lines 1-5) + bucket assignment.
+
+        Rejects unusable images with :class:`~repro.api.errors.PlanError`
+        before any planning work (DESIGN.md §14): a non-finite pixel would
+        otherwise flow silently into the region statistics and poison the
+        lane's first energy evaluation.
+        """
         t0 = time.perf_counter()
+        img = np.asarray(image)
+        if img.size == 0:
+            raise PlanError(f"cannot plan a zero-element image (shape {img.shape})")
+        if np.issubdtype(img.dtype, np.floating) and not np.isfinite(img).all():
+            bad = int(np.size(img) - np.isfinite(img).sum())
+            raise PlanError(
+                f"image contains {bad} non-finite pixel(s); segmentation "
+                "energies are undefined for NaN/Inf intensities"
+            )
+        image = img
         problem = pipeline_mod.initialize(
             image,
             overseg_grid=self.config.overseg_grid,
@@ -272,13 +298,14 @@ class Segmenter:
         bucket: BucketKey,
         batch: Optional[int],
         tick_iters: Optional[int] = None,
+        backend: Optional[str] = None,
     ) -> ExecutableKey:
         c = self.config
         return ExecutableKey(
             capacity=bucket.capacity,
             n_hoods=bucket.n_hoods,
             n_regions=bucket.n_regions,
-            backend=c.resolved_backend(),
+            backend=backend if backend is not None else c.resolved_backend(),
             mode=c.mode,
             max_em_iters=c.max_em_iters,
             max_map_iters=c.max_map_iters,
@@ -306,8 +333,89 @@ class Segmenter:
             )
         return Mesh(np.array(devices[:n]), (self.config.mesh_axis,))
 
+    def _get_or_compile(self, key: ExecutableKey, build) -> Executable:
+        """Shared cache front-end for every compile surface.
+
+        ``build(backend) -> (compiled, em_config)`` performs the actual
+        lower+compile for a concrete backend.  On compile failure the
+        session applies ``config.fallback`` (DESIGN.md §14): same-backend
+        retries with capped backoff, then one recompile on the fallback
+        backend — cached under the *fallback's own* key (the key pins the
+        resolved backend), with a redirect recorded so warm traffic for
+        the original key lands on the fallback executable directly.
+        """
+        key = self._fallback_redirects.get(key, key)
+        exe = self._cache.get(key)
+        if exe is not None:
+            self._cache.move_to_end(key)
+            self.stats.hits += 1
+            return exe
+
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        compiled, em_config, used_key = self._build_with_policy(key, build)
+        exe = Executable(
+            key=used_key,
+            compiled=compiled,
+            em_config=em_config,
+            compile_seconds=time.perf_counter() - t0,
+        )
+        self._cache[used_key] = exe
+        while len(self._cache) > self.config.max_cached_executables:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+        return exe
+
+    def _build_with_policy(self, key: ExecutableKey, build):
+        """Run ``build`` under the fallback policy; returns
+        ``(compiled, em_config, key_actually_compiled)``."""
+        policy = self.config.fallback
+        delay = policy.backoff_s
+        attempt = 0
+        while True:
+            try:
+                compiled, em_config = build(key.backend)
+                return compiled, em_config, key
+            except Exception as e:  # noqa: BLE001 — classify, then re-raise
+                if attempt < policy.max_retries:
+                    attempt += 1
+                    time.sleep(min(delay, policy.max_backoff_s))
+                    delay *= 2
+                    continue
+                if not (policy.enabled and key.backend != policy.backend):
+                    raise
+                fb_key = key._replace(backend=policy.backend)
+                self.fallback_events.append(
+                    {
+                        "stage": "compile",
+                        "from": key.backend,
+                        "to": policy.backend,
+                        "error": repr(e),
+                    }
+                )
+                warnings.warn(
+                    f"compile on backend {key.backend!r} failed after "
+                    f"{attempt} retr{'y' if attempt == 1 else 'ies'} ({e!r}); "
+                    f"falling back to {policy.backend!r}",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+                try:
+                    compiled, em_config = build(policy.backend)
+                except Exception as fb_e:
+                    raise FallbackError(
+                        f"compile failed on {key.backend!r} and on the "
+                        f"fallback backend {policy.backend!r}"
+                    ) from fb_e
+                self._fallback_redirects[key] = fb_key
+                return compiled, em_config, fb_key
+
     def compile(
-        self, target: Union[Plan, BucketKey, Tuple[int, int, int]], *, batch: Optional[int] = None
+        self,
+        target: Union[Plan, BucketKey, Tuple[int, int, int]],
+        *,
+        batch: Optional[int] = None,
+        backend: Optional[str] = None,
     ) -> Executable:
         """Return the compiled EM program for a bucket, compiling on miss.
 
@@ -316,7 +424,10 @@ class Segmenter:
         least-recently-used executable once the cache exceeds
         ``config.max_cached_executables``.  When the session is sharded
         (``config.shards > 1``) the compiled program is the SPMD
-        ``run_em_sharded`` driver over the session mesh.
+        ``run_em_sharded`` driver over the session mesh.  ``backend``
+        overrides the session's resolved backend (the execute-time
+        fallback path uses it); compile failures go through the session's
+        :class:`~repro.api.config.FallbackPolicy`.
         """
         bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
         shards = self.config.shards
@@ -326,36 +437,23 @@ class Segmenter:
                 "(the mesh already parallelizes one request across devices); "
                 "drain() runs sharded requests serially"
             )
-        key = self._key_for(bucket, batch)
-        exe = self._cache.get(key)
-        if exe is not None:
-            self._cache.move_to_end(key)
-            self.stats.hits += 1
-            return exe
+        key = self._key_for(bucket, batch, backend=backend)
 
-        self.stats.misses += 1
-        em_config = self.config.em_config()
-        abstract = _abstract_inputs(bucket, batch, shards, self.config.n_labels)
-        t0 = time.perf_counter()
-        if shards > 1:
-            compiled = distributed_mod.run_em_sharded.lower(
-                *abstract, config=em_config, mesh=self.mesh(),
-                axis=self.config.mesh_axis,
-            ).compile()
-        else:
-            fn = em_mod.run_em if batch is None else em_mod.run_em_batched
-            compiled = fn.lower(*abstract, em_config).compile()
-        exe = Executable(
-            key=key,
-            compiled=compiled,
-            em_config=em_config,
-            compile_seconds=time.perf_counter() - t0,
-        )
-        self._cache[key] = exe
-        while len(self._cache) > self.config.max_cached_executables:
-            self._cache.popitem(last=False)
-            self.stats.evictions += 1
-        return exe
+        def build(bk: str):
+            chaos_mod.on_compile(bk)
+            em_config = self.config.em_config(backend=bk)
+            abstract = _abstract_inputs(bucket, batch, shards, self.config.n_labels)
+            if shards > 1:
+                compiled = distributed_mod.run_em_sharded.lower(
+                    *abstract, config=em_config, mesh=self.mesh(),
+                    axis=self.config.mesh_axis,
+                ).compile()
+            else:
+                fn = em_mod.run_em if batch is None else em_mod.run_em_batched
+                compiled = fn.lower(*abstract, em_config).compile()
+            return compiled, em_config
+
+        return self._get_or_compile(key, build)
 
     def compile_ticked(
         self,
@@ -363,6 +461,7 @@ class Segmenter:
         *,
         batch: int,
         tick_iters: int = 8,
+        backend: Optional[str] = None,
     ) -> Executable:
         """Compile (or fetch) the ticked serving executable for a bucket.
 
@@ -373,6 +472,8 @@ class Segmenter:
         ``ExecutableKey.tick_iters``) and performs zero traces on a warm
         hit.  The serving engine (``repro.serving``) is the intended
         caller; see DESIGN.md §12 for the slot/tick/masking contract.
+        Compile failures go through the session's
+        :class:`~repro.api.config.FallbackPolicy` (DESIGN.md §14).
         """
         bucket = BucketKey(*(target.bucket if isinstance(target, Plan) else target))
         if self.config.shards > 1:
@@ -382,34 +483,21 @@ class Segmenter:
             )
         if batch < 1 or tick_iters < 1:
             raise ValueError("compile_ticked needs batch >= 1 and tick_iters >= 1")
-        key = self._key_for(bucket, batch, tick_iters=tick_iters)
-        exe = self._cache.get(key)
-        if exe is not None:
-            self._cache.move_to_end(key)
-            self.stats.hits += 1
-            return exe
-
-        self.stats.misses += 1
-        em_config = self.config.em_config()
+        key = self._key_for(bucket, batch, tick_iters=tick_iters, backend=backend)
         n_labels = self.config.n_labels
-        hoods_abs, model_abs, *_ = _abstract_inputs(bucket, batch, 1, n_labels)
-        state_abs = _abstract_tick_state(bucket, batch, n_labels)
-        plan_abs = _abstract_vote_plan(bucket, batch)
-        t0 = time.perf_counter()
-        compiled = em_mod.run_em_ticked.lower(
-            hoods_abs, model_abs, state_abs, plan_abs, em_config, tick_iters
-        ).compile()
-        exe = Executable(
-            key=key,
-            compiled=compiled,
-            em_config=em_config,
-            compile_seconds=time.perf_counter() - t0,
-        )
-        self._cache[key] = exe
-        while len(self._cache) > self.config.max_cached_executables:
-            self._cache.popitem(last=False)
-            self.stats.evictions += 1
-        return exe
+
+        def build(bk: str):
+            chaos_mod.on_compile(bk)
+            em_config = self.config.em_config(backend=bk)
+            hoods_abs, model_abs, *_ = _abstract_inputs(bucket, batch, 1, n_labels)
+            state_abs = _abstract_tick_state(bucket, batch, n_labels)
+            plan_abs = _abstract_vote_plan(bucket, batch)
+            compiled = em_mod.run_em_ticked.lower(
+                hoods_abs, model_abs, state_abs, plan_abs, em_config, tick_iters
+            ).compile()
+            return compiled, em_config
+
+        return self._get_or_compile(key, build)
 
     def ticked_pool(self, target, *, batch: int):
         """An all-empty slot pool for a ticked executable — ``(hoods,
@@ -463,6 +551,7 @@ class Segmenter:
 
     def clear_cache(self) -> None:
         self._cache.clear()
+        self._fallback_redirects.clear()
 
     @property
     def cache_keys(self) -> Tuple[ExecutableKey, ...]:
@@ -528,15 +617,69 @@ class Segmenter:
         plan._padded[memo_key] = (hoods, model, lab, mu0, sigma0)
         return plan._padded[memo_key]
 
+    def _run_with_retry(self, exe: Executable, inputs):
+        """Invoke an executable under the fallback policy's same-backend
+        transient retry (capped backoff)."""
+        policy = self.config.fallback
+        delay = policy.backoff_s
+        attempt = 0
+        while True:
+            try:
+                chaos_mod.on_execute(exe.key.backend)
+                return exe(*inputs)
+            except Exception:
+                if attempt >= policy.max_retries:
+                    raise
+                attempt += 1
+                time.sleep(min(delay, policy.max_backoff_s))
+                delay *= 2
+
     def execute(
         self, plan: Plan, *, seed: int = 0, bucket: Optional[BucketKey] = None
     ) -> pipeline_mod.SegmentationResult:
-        """Run one plan through its bucket's cached executable."""
+        """Run one plan through its bucket's cached executable.
+
+        Execute failures follow the same :class:`FallbackPolicy` as
+        compiles (DESIGN.md §14): transient retries on the same
+        executable, then one recompile+rerun on the fallback backend (the
+        redirect is remembered, so subsequent traffic goes straight to
+        the fallback executable).
+        """
         bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
         exe = self.compile(bucket)
         inputs = self._pad_plan(plan, bucket, seed)
+        policy = self.config.fallback
         t0 = time.perf_counter()
-        res = exe(*inputs)
+        try:
+            res = self._run_with_retry(exe, inputs)
+        except Exception as e:
+            if not (policy.enabled and exe.key.backend != policy.backend):
+                raise
+            self.fallback_events.append(
+                {
+                    "stage": "execute",
+                    "from": exe.key.backend,
+                    "to": policy.backend,
+                    "error": repr(e),
+                }
+            )
+            warnings.warn(
+                f"execute on backend {exe.key.backend!r} failed ({e!r}); "
+                f"retrying on fallback backend {policy.backend!r}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            self._fallback_redirects[exe.key] = exe.key._replace(
+                backend=policy.backend
+            )
+            exe = self.compile(bucket, backend=policy.backend)
+            try:
+                res = self._run_with_retry(exe, inputs)
+            except Exception as fb_e:
+                raise FallbackError(
+                    f"execute failed on {self.config.resolved_backend()!r} "
+                    f"and on the fallback backend {policy.backend!r}"
+                ) from fb_e
         jax.block_until_ready(res.labels)
         opt_s = time.perf_counter() - t0
         return pipeline_mod._assemble_result(plan.problem, res, plan.init_seconds, opt_s)

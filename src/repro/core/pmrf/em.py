@@ -53,6 +53,29 @@ WINDOW = 3  # the paper's L
 
 MODES = ("faithful", "static", "static-pallas")
 
+# Per-lane health lattice (DESIGN.md §14).  Computed device-side at every
+# EM boundary — no extra readbacks — and carried in ``EMResult.status`` /
+# ``TickState.status``.  DIVERGED and DEGENERATE are terminal: a sick lane
+# sets ``done`` and freezes bitwise exactly like a converged one, so the
+# serving engine quarantines it through the ordinary retirement path.
+# Priority (highest wins): DIVERGED > DEGENERATE > CONVERGED > MAX_ITERS.
+STATUS_OK = 0          # still iterating (only seen mid-flight)
+STATUS_CONVERGED = 1   # EM window converged
+STATUS_MAX_ITERS = 2   # stopped at the EM iteration cap
+STATUS_DIVERGED = 3    # non-finite energies or parameters
+STATUS_DEGENERATE = 4  # empty real label with sigma pinned at sigma_min
+
+STATUS_NAMES = {
+    STATUS_OK: "running",
+    STATUS_CONVERGED: "converged",
+    STATUS_MAX_ITERS: "max_iters",
+    STATUS_DIVERGED: "diverged",
+    STATUS_DEGENERATE: "degenerate",
+}
+
+#: Statuses that mean "the result is a legitimate segmentation".
+OK_STATUSES = frozenset({STATUS_CONVERGED, STATUS_MAX_ITERS})
+
 # Python-side trace counters: incremented each time a driver's body is
 # traced (never inside the compiled program).  Tests assert that the
 # batched multi-slice path compiles exactly one program for a whole stack
@@ -87,6 +110,7 @@ class EMResult(NamedTuple):
     total_energy: Array  # scalar
     em_iters: Array      # scalar int32
     map_iters: Array     # scalar int32 — total inner iterations executed
+    status: Array        # scalar int32 — STATUS_* health code
 
 
 class _MapCarry(NamedTuple):
@@ -95,6 +119,7 @@ class _MapCarry(NamedTuple):
     hood_energy: Array
     i: Array
     done: Array          # replicated convergence flag (ctx.all_converged)
+    diverged: Array      # replicated non-finite-energy flag (folds into done)
 
 
 class _EmCarry(NamedTuple):
@@ -106,6 +131,7 @@ class _EmCarry(NamedTuple):
     em_i: Array
     map_total: Array
     done: Array
+    status: Array        # () int32 — STATUS_* at the last EM boundary
 
 
 def init_params(
@@ -188,8 +214,18 @@ def _map_step(
     i = carry.i + 1
     # Convergence is decided in the body (not the loop cond) so the
     # collective AND runs in replicated context on every backend.
-    done = ctx.all_converged(_window_converged(hist, i), active=active)
-    return _MapCarry(labels=labels, hist=hist, hood_energy=hood_e, i=i, done=done)
+    conv = ctx.all_converged(_window_converged(hist, i), active=active)
+    # Divergence folds into ``done`` so a poisoned lane exits the inner
+    # loop *immediately* — detection and termination are atomic, which is
+    # what lets the ticked drivers skip carrying the flag between steps.
+    # ``hood_e`` is already replicated (it went through the collective
+    # context), so a plain jnp.all sees the same value on every shard; a
+    # masked (frozen) lane contributes exact zeros, which are finite.
+    diverged = ~jnp.all(jnp.isfinite(hood_e))
+    return _MapCarry(
+        labels=labels, hist=hist, hood_energy=hood_e, i=i,
+        done=conv | diverged, diverged=diverged,
+    )
 
 
 def _window_converged(hist: Array, i: Array) -> Array:
@@ -199,6 +235,43 @@ def _window_converged(hist: Array, i: Array) -> Array:
     scale = jnp.maximum(jnp.abs(hist[0]), 1.0)
     conv = jnp.all(deltas < CONV_TOL * scale, axis=0)
     return jnp.where(i > WINDOW, conv, False)
+
+
+def _degenerate_components(model: E.EnergyModel, sigma, sum_w) -> Array:
+    """True when some *real* label ended the M-step with (near-)zero mass
+    AND a reseed target pinned at ``sigma_min`` — it can never recapture
+    mass (the collapsed-Gaussian hazard, DESIGN.md §14).  Inert padded
+    labels (mixed-K pools, ``reseed_mu == INERT_MU``) are excluded: they
+    are *supposed* to be empty.  A dead label whose reseed sigma exceeds
+    ``sigma_min`` is the documented recovery path, not a degeneracy."""
+    dead = sum_w < 1e-3 * jnp.sum(sum_w)
+    real = model.reseed_mu < E.INERT_MU
+    return jnp.any(dead & real & (sigma <= model.sigma_min))
+
+
+def _boundary_status(div, deg, finished, em_conv, em_i, max_em_iters) -> Array:
+    """STATUS_* code at one EM boundary (elementwise; works batched).
+
+    DIVERGED dominates; DEGENERATE only sticks on a lane that is
+    *finishing* this boundary (mid-run label death followed by reseed
+    recovery is healthy); otherwise the ordinary converged / iteration-cap
+    / still-running resolution."""
+    i32 = jnp.int32
+    return jnp.where(
+        div,
+        i32(STATUS_DIVERGED),
+        jnp.where(
+            finished & deg,
+            i32(STATUS_DEGENERATE),
+            jnp.where(
+                em_conv,
+                i32(STATUS_CONVERGED),
+                jnp.where(
+                    em_i >= max_em_iters, i32(STATUS_MAX_ITERS), i32(STATUS_OK)
+                ),
+            ),
+        ),
+    )
 
 
 def _em_driver(
@@ -241,6 +314,7 @@ def _em_driver(
             hood_energy=jnp.zeros((n_hoods,), jnp.float32),
             i=jnp.int32(0),
             done=jnp.bool_(False),
+            diverged=jnp.bool_(False),
         )
 
         def cond(c: _MapCarry):
@@ -254,11 +328,21 @@ def _em_driver(
 
     def em_body(c: _EmCarry) -> _EmCarry:
         mc = map_loop(c.labels, c.mu, c.sigma)
-        mu, sigma = E.update_parameters(model, mc.labels, mode)
+        mu, sigma, sum_w = E.update_parameters_stats(model, mc.labels, mode)
+        # Health classification (DESIGN.md §14) — pure extra compute on
+        # values the boundary already produced; never rewrites the healthy
+        # arithmetic, so healthy trajectories stay bitwise unchanged.
+        div = (
+            mc.diverged
+            | ~jnp.all(jnp.isfinite(mu))
+            | ~jnp.all(jnp.isfinite(sigma))
+        )
+        deg = _degenerate_components(model, sigma, sum_w)
         total = jnp.sum(mc.hood_energy)
         hist = jnp.roll(c.total_hist, 1).at[0].set(total)
         em_i = c.em_i + 1
-        done = ctx.all_converged(_window_converged(hist[:, None], em_i)[0])
+        em_conv = ctx.all_converged(_window_converged(hist[:, None], em_i)[0])
+        finished = div | ~((em_i < config.max_em_iters) & ~em_conv)
         return _EmCarry(
             labels=mc.labels,
             mu=mu,
@@ -267,7 +351,10 @@ def _em_driver(
             total_hist=hist,
             em_i=em_i,
             map_total=c.map_total + mc.i,
-            done=done,
+            done=em_conv | div,
+            status=_boundary_status(
+                div, deg, finished, em_conv, em_i, config.max_em_iters
+            ),
         )
 
     init = _EmCarry(
@@ -279,6 +366,7 @@ def _em_driver(
         em_i=jnp.int32(0),
         map_total=jnp.int32(0),
         done=jnp.bool_(False),
+        status=jnp.int32(STATUS_OK),
     )
 
     final = jax.lax.while_loop(
@@ -295,6 +383,7 @@ def _em_driver(
         total_energy=jnp.sum(final.hood_energy),
         em_iters=final.em_i,
         map_iters=final.map_total,
+        status=final.status,
     )
 
 
@@ -380,6 +469,7 @@ class TickState(NamedTuple):
     em_i: Array         # () int32
     map_total: Array    # () int32 — total inner iterations executed
     done: Array         # () bool  — lane finished (retire + refill me)
+    status: Array       # () int32 — STATUS_* health code (DESIGN.md §14)
 
 
 def init_tick_lane(labels0: Array, mu0: Array, sigma0: Array, n_hoods: int) -> TickState:
@@ -397,6 +487,7 @@ def init_tick_lane(labels0: Array, mu0: Array, sigma0: Array, n_hoods: int) -> T
         em_i=jnp.int32(0),
         map_total=jnp.int32(0),
         done=jnp.bool_(False),
+        status=jnp.int32(STATUS_OK),
     )
 
 
@@ -422,6 +513,7 @@ def blank_tick_state(
         em_i=full((), 0, jnp.int32),
         map_total=full((), 0, jnp.int32),
         done=full((), True, jnp.bool_),
+        status=full((), STATUS_OK, jnp.int32),
     )
 
 
@@ -436,6 +528,7 @@ def tick_result(state: TickState) -> EMResult:
         total_energy=jnp.sum(state.hood_energy, axis=-1),
         em_iters=state.em_i,
         map_iters=state.map_total,
+        status=state.status,
     )
 
 
@@ -464,23 +557,35 @@ def _tick_micro(
         hoods, model, mode, backend, sctx, ctx, s.mu, s.sigma,
         _MapCarry(
             labels=s.labels, hist=s.map_hist, hood_energy=s.hood_energy,
-            i=s.map_i, done=s.map_done,
+            i=s.map_i, done=s.map_done, diverged=jnp.bool_(False),
         ),
         active=active,
     )
     # Would the inner while_loop take another step?  (run_em's map cond.)
+    # Divergence is already folded into mc.done, so a poisoned lane hits
+    # the EM boundary in this same micro-step — identical sequencing to
+    # the serial driver's while_loop exit.
     map_exit = ~((mc.i < config.max_map_iters) & ~mc.done)
 
     # EM boundary work, computed unconditionally and selected in: identical
     # values to run_em's em_body at the moment the inner loop exits.
-    mu_b, sigma_b = E.update_parameters(model, mc.labels, mode)
+    mu_b, sigma_b, sum_w_b = E.update_parameters_stats(model, mc.labels, mode)
+    div_b = (
+        mc.diverged
+        | ~jnp.all(jnp.isfinite(mu_b))
+        | ~jnp.all(jnp.isfinite(sigma_b))
+    )
+    deg_b = _degenerate_components(model, sigma_b, sum_w_b)
     total = jnp.sum(mc.hood_energy)
     hist_b = jnp.roll(s.total_hist, 1).at[0].set(total)
     em_i_b = s.em_i + 1
     em_done_b = ctx.all_converged(
         _window_converged(hist_b[:, None], em_i_b)[0], active=active
     )
-    lane_done_b = ~((em_i_b < config.max_em_iters) & ~em_done_b)
+    lane_done_b = div_b | ~((em_i_b < config.max_em_iters) & ~em_done_b)
+    status_b = _boundary_status(
+        div_b, deg_b, lane_done_b, em_done_b, em_i_b, config.max_em_iters
+    )
 
     def sel(at_boundary, inside):
         return jnp.where(map_exit, at_boundary, inside)
@@ -497,6 +602,7 @@ def _tick_micro(
         em_i=sel(em_i_b, s.em_i),
         map_total=sel(s.map_total + mc.i, s.map_total),
         done=sel(lane_done_b, s.done),
+        status=sel(status_b, s.status),
     )
     # Freeze retired / empty lanes bitwise (per-leaf select on s.done).
     return jax.tree.map(lambda new, old: jnp.where(s.done, old, new), stepped, s)
@@ -674,9 +780,14 @@ def _pool_tick_micro(
     deltas = jnp.abs(map_hist[:, :-1] - map_hist[:, 1:])
     scale = jnp.maximum(jnp.abs(map_hist[:, 0]), 1.0)
     conv = jnp.all(deltas < CONV_TOL * scale[:, None], axis=1)     # (B, nh)
+    # Divergence (== _map_step): non-finite lane energies exit the inner
+    # loop this micro-step.  Lanes are isolated in every keyed reduction
+    # (lane-offset key spaces, per-lane run sums), so one lane's NaN can
+    # never leak into a co-resident healthy lane.
+    bad = ~jnp.all(jnp.isfinite(hood_e), axis=1)                   # (B,)
     map_done = jnp.where(
         active,
-        jnp.all(jnp.where(map_i[:, None] > WINDOW, conv, False), axis=1),
+        jnp.all(jnp.where(map_i[:, None] > WINDOW, conv, False), axis=1) | bad,
         jnp.bool_(True),
     )
     map_exit = ~((map_i < config.max_map_iters) & ~map_done)
@@ -700,6 +811,16 @@ def _pool_tick_micro(
     dead = sum_w < 1e-3 * jnp.sum(sum_w, axis=1, keepdims=True)
     mu_b = jnp.where(dead, model.reseed_mu, mu_b)
     sigma_b = jnp.where(dead, model.reseed_sigma[:, None], sigma_b)
+    # Health classification (== _tick_micro's boundary, batched).
+    div_b = (
+        bad
+        | ~jnp.all(jnp.isfinite(mu_b), axis=1)
+        | ~jnp.all(jnp.isfinite(sigma_b), axis=1)
+    )
+    real = model.reseed_mu < E.INERT_MU                     # (B, K)
+    deg_b = jnp.any(
+        dead & real & (sigma_b <= model.sigma_min[:, None]), axis=1
+    )
 
     total = jnp.sum(hood_e, axis=1)
     hist_b = jnp.roll(s.total_hist, shift=1, axis=1).at[:, 0].set(total)
@@ -710,7 +831,10 @@ def _pool_tick_micro(
     em_done_b = jnp.where(
         active, jnp.where(em_i_b > WINDOW, em_conv, False), jnp.bool_(True)
     )
-    lane_done_b = ~((em_i_b < config.max_em_iters) & ~em_done_b)
+    lane_done_b = div_b | ~((em_i_b < config.max_em_iters) & ~em_done_b)
+    status_b = _boundary_status(
+        div_b, deg_b, lane_done_b, em_done_b, em_i_b, config.max_em_iters
+    )
 
     def sel(at_boundary, inside):
         cond = map_exit
@@ -730,6 +854,7 @@ def _pool_tick_micro(
         em_i=sel(em_i_b, s.em_i),
         map_total=sel(s.map_total + map_i, s.map_total),
         done=sel(lane_done_b, s.done),
+        status=sel(status_b, s.status),
     )
 
     def freeze(new, old):

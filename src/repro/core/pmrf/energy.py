@@ -496,6 +496,22 @@ def update_parameters(
     static mode uses labels directly as segment ids.  Identical math.
     K comes from the model's reseed array (DESIGN.md §13).
     """
+    mu, sigma, _ = update_parameters_stats(model, labels, mode)
+    return mu, sigma
+
+
+def update_parameters_stats(
+    model: EnergyModel, labels: Array, mode: str
+) -> Tuple[Array, Array, Array]:
+    """M-step plus its per-label mass vector ``sum_w``.
+
+    The mass is a free byproduct of the reductions the M-step already
+    performs; the ticked drivers' health classification (DESIGN.md §14)
+    uses it to detect degenerate components — a *real* (non-inert) label
+    with (near-)zero mass whose reseed target is itself pinned at
+    ``sigma_min`` can never recapture mass, which is the classic collapsed-
+    Gaussian hazard of EM.  Returns ``(mu, sigma, sum_w)``.
+    """
     n_labels = model.n_labels
     y = model.region_mean
     w = model.region_weight  # sentinel lane has weight 0
@@ -525,4 +541,4 @@ def update_parameters(
     dead = sum_w < 1e-3 * jnp.sum(sum_w)
     mu = jnp.where(dead, model.reseed_mu, mu)
     sigma = jnp.where(dead, model.reseed_sigma, sigma)
-    return mu, sigma
+    return mu, sigma, sum_w

@@ -49,6 +49,14 @@ class SegmentationResult:
     total_energy: float
     init_seconds: float
     optimize_seconds: float
+    # Per-lane health (DESIGN.md §14): "converged" | "max_iters" |
+    # "diverged" | "degenerate" | "running" (a lane read out mid-flight).
+    status: str = "converged"
+
+    @property
+    def ok(self) -> bool:
+        """True when the result is a legitimate segmentation."""
+        return self.status in ("converged", "max_iters")
 
 
 def initialize(
@@ -182,6 +190,7 @@ def _assemble_result(
         total_energy=float(result.total_energy),
         init_seconds=init_seconds,
         optimize_seconds=optimize_seconds,
+        status=em_mod.STATUS_NAMES.get(int(result.status), "running"),
     )
 
 

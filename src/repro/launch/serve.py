@@ -5,6 +5,14 @@ per-request latency percentiles and throughput.
 ``--check`` re-runs every request through the serial ``run_em`` executable
 and exits non-zero on any label mismatch — the CI ``serve-smoke`` gate.
 
+``--chaos`` activates the deterministic chaos harness (DESIGN.md §14):
+``--poison-rate`` of the stream is assigned a fault class round-robin
+(``nan_image`` — rejected at submit; ``bad_init`` / ``nan_data`` —
+quarantined on-device as ``diverged``; ``never_converge`` — evicted).
+With ``--check`` the gate also asserts every faulted request produced the
+expected non-ok disposition and every healthy request still matches
+serial ``run_em`` bitwise — the CI ``chaos-soak`` gate.
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve \
@@ -25,6 +33,22 @@ import numpy as np
 from repro import api
 from repro.core import synthetic
 from repro.serving import SegmentationEngine
+from repro.testing import chaos as chaos_mod
+
+#: Fault classes --chaos cycles through (round-robin over the poisoned rids).
+CHAOS_CYCLE = ("bad_init", "nan_image", "never_converge", "nan_data")
+
+
+def assign_faults(n_requests: int, rate: float, seed: int) -> dict:
+    """Deterministic rid -> fault-class map: ``round(n * rate)`` rids (at
+    least 1 when rate > 0), spread by seeded choice, faults assigned
+    round-robin so every class appears once the poison count allows."""
+    if rate <= 0:
+        return {}
+    k = min(n_requests, max(1, round(n_requests * rate)))
+    rng = np.random.default_rng(seed)
+    rids = sorted(rng.choice(n_requests, size=k, replace=False).tolist())
+    return {rid: CHAOS_CYCLE[i % len(CHAOS_CYCLE)] for i, rid in enumerate(rids)}
 
 
 def main() -> None:
@@ -49,14 +73,26 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="verify every lane result against serial run_em; "
                          "exit 1 on any label mismatch")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject deterministic faults into the stream "
+                         "(DESIGN.md §14); with --check, also gate on "
+                         "fault disposition")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--poison-rate", type=float, default=0.25,
+                    help="fraction of requests assigned a fault under --chaos")
+    ap.add_argument("--init", default="quantile", choices=("random", "quantile"),
+                    help="EM parameter init (quantile converges reliably on "
+                         "the synthetic phantoms)")
     args = ap.parse_args()
     if args.requests < 1:
         ap.error("--requests must be >= 1")
+    if not 0.0 <= args.poison_rate <= 1.0:
+        ap.error("--poison-rate must be in [0, 1]")
 
     cfg = api.ExecutionConfig(
         backend=args.backend, mode=args.mode,
         overseg_grid=(args.grid, args.grid), capacity_bucket=4096,
-        n_labels=args.labels,
+        n_labels=args.labels, init=args.init,
     )
     sess = api.Segmenter(cfg)
 
@@ -70,21 +106,54 @@ def main() -> None:
             seed=args.seed, n_slices=args.requests, shape=(args.shape, args.shape)
         )
     imgs = [np.asarray(im) for im in vol.images]
-    plans = [sess.plan(img) for img in imgs]
+
+    faults = (
+        assign_faults(args.requests, args.poison_rate, args.chaos_seed)
+        if args.chaos else {}
+    )
+    chaos_cfg = chaos_mod.ChaosConfig(
+        seed=args.chaos_seed,
+        nan_image_rids=tuple(r for r, f in faults.items() if f == "nan_image"),
+        bad_init_rids=tuple(r for r, f in faults.items() if f == "bad_init"),
+        nan_data_rids=tuple(r for r, f in faults.items() if f == "nan_data"),
+        never_converge_rids=tuple(
+            r for r, f in faults.items() if f == "never_converge"
+        ),
+    )
+    # Healthy plans are prepared up front (plan time is not serving time);
+    # nan_image rids get a poisoned raw image instead — plan() must reject.
+    plans = {
+        rid: sess.plan(img)
+        for rid, img in enumerate(imgs)
+        if faults.get(rid) != "nan_image"
+    }
 
     engine = SegmentationEngine(
         sess, max_batch=args.max_batch, tick_iters=args.tick_iters
     )
-    t0 = time.perf_counter()
-    for rid, plan in enumerate(plans):
-        deadline = (
-            None if args.deadline_spread <= 0
-            else args.deadline_spread * rid / max(len(plans) - 1, 1)
-        )
-        engine.submit(plan, rid=rid, seed=args.seed, deadline_s=deadline)
-    completions = engine.run()
-    wall = time.perf_counter() - t0
+    rejected = []
+    with chaos_mod.inject(chaos_cfg) as monkey:
+        t0 = time.perf_counter()
+        for rid in range(args.requests):
+            deadline = (
+                None if args.deadline_spread <= 0
+                else args.deadline_spread * rid / max(args.requests - 1, 1)
+            )
+            if faults.get(rid) == "nan_image":
+                try:
+                    engine.submit(
+                        monkey.poison_image(imgs[rid], rid),
+                        rid=rid, seed=args.seed, deadline_s=deadline,
+                    )
+                except api.ServingError:
+                    rejected.append(rid)
+                continue
+            engine.submit(plans[rid], rid=rid, seed=args.seed, deadline_s=deadline)
+        completions = engine.run()
+        wall = time.perf_counter() - t0
 
+    by_rid = {c.rid: c for c in completions}
+    healthy = [c for c in completions if c.rid not in faults]
     lat = np.array([c.latency_s for c in completions])
     report = {
         "requests": len(completions),
@@ -94,6 +163,7 @@ def main() -> None:
         "bucket": list(engine.bucket),
         "wall_s": round(wall, 3),
         "throughput_rps": round(len(completions) / wall, 2),
+        "healthy_rps": round(len(healthy) / wall, 2),
         "latency_p50_s": round(float(np.percentile(lat, 50)), 4),
         "latency_p95_s": round(float(np.percentile(lat, 95)), 4),
         "mean_em_iters": round(
@@ -101,10 +171,21 @@ def main() -> None:
         ),
         **engine.stats(),
     }
+    if args.chaos:
+        report["chaos"] = {
+            "seed": args.chaos_seed,
+            "poison_rate": args.poison_rate,
+            "faults": {str(r): f for r, f in sorted(faults.items())},
+            "rejected_rids": rejected,
+            "statuses": {str(c.rid): c.status for c in completions if not c.ok},
+            "injections": len(monkey.events),
+        }
 
+    failures = []
     if args.check:
-        mismatches = []
-        for c in sorted(completions, key=lambda c: c.rid):
+        # Healthy lanes must match serial run_em bitwise — chaos or not
+        # (serial reference runs OUTSIDE the chaos context).
+        for c in sorted(healthy, key=lambda c: c.rid):
             want = sess.execute(plans[c.rid], seed=args.seed)
             if not (
                 np.array_equal(c.result.region_labels, want.region_labels)
@@ -112,19 +193,34 @@ def main() -> None:
                 and np.array_equal(c.result.mu, want.mu)
                 and np.array_equal(c.result.sigma, want.sigma)
                 and c.result.em_iters == want.em_iters
+                and c.status == want.status
             ):
-                mismatches.append(c.rid)
-        report["check"] = "ok" if not mismatches else f"MISMATCH rids={mismatches}"
-        if mismatches:
-            print(json.dumps(report))
-            print(
-                f"serve --check FAILED: lane results diverged from serial "
-                f"run_em for rids {mismatches}",
-                file=sys.stderr,
-            )
-            sys.exit(1)
+                failures.append(f"rid {c.rid}: lane diverged from serial run_em")
+        # Faulted requests must have the expected disposition.
+        for rid, fault in sorted(faults.items()):
+            if fault == "nan_image":
+                if rid not in rejected:
+                    failures.append(f"rid {rid}: poisoned image was not rejected")
+            elif rid not in by_rid:
+                failures.append(f"rid {rid}: faulted request never completed")
+            elif fault in ("bad_init", "nan_data"):
+                if by_rid[rid].status != "diverged":
+                    failures.append(
+                        f"rid {rid}: {fault} lane status "
+                        f"{by_rid[rid].status!r}, want 'diverged'"
+                    )
+            elif fault == "never_converge":
+                if by_rid[rid].status != "evicted":
+                    failures.append(
+                        f"rid {rid}: never_converge lane status "
+                        f"{by_rid[rid].status!r}, want 'evicted'"
+                    )
+        report["check"] = "ok" if not failures else failures
 
     print(json.dumps(report))
+    if failures:
+        print("serve --check FAILED:", *failures, sep="\n  ", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

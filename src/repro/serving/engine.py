@@ -1,11 +1,11 @@
-"""Continuous-batching segmentation serving engine (DESIGN.md §12).
+"""Continuous-batching segmentation serving engine (DESIGN.md §12, §14).
 
 The engine owns a fixed pool of ``max_batch`` slots over ONE
 bucket-compiled ticked executable (``Segmenter.compile_ticked``).  EM for
 every resident request advances in fixed-size **ticks** — one
 ``run_em_ticked`` call = ``tick_iters`` masked micro-steps per lane —
 instead of one monolithic per-request ``while_loop``.  Between ticks the
-host retires converged lanes (their ``done`` flag is the only per-tick
+host retires finished lanes (their ``done`` flag is the per-tick
 readback) and admits pending requests into the freed slots in deadline
 order, without disturbing in-flight lanes and without ever retracing: the
 pool's shapes are fixed at compile time, admission and retirement are pure
@@ -24,6 +24,18 @@ label-visible output (labels, segmentation, mu, sigma, iteration counts);
 energies agree to float-reduction tolerance (DESIGN.md §12 — the same
 fusion-context caveat as faithful-vs-static mode parity).
 
+**Failure model (DESIGN.md §14).**  A poisoned request can never crash the
+pool: requests are validated at ``submit`` (typed
+:class:`~repro.api.errors.RequestError` / ``PlanError``); a lane that
+diverges or degenerates on-device sets its traced ``status`` and freezes
+exactly like a converged lane, so it retires through the ordinary path as
+a :class:`SegCompletion` with an error ``status``; a lane that simply
+never converges is evicted after ``max_ticks_resident`` ticks.  Healthy
+co-resident lanes are bitwise unaffected (lanes are isolated in every
+keyed reduction — chaos-tested).  Tick times feed a
+:class:`~repro.training.fault.StragglerWatchdog`; execute failures retry
+through the session's :class:`~repro.api.config.FallbackPolicy`.
+
 Mixed-K traffic (DESIGN.md §13): the pool is compiled at the session's
 ``n_labels``; requests with fewer labels are admitted by label-padding
 their lanes with inert sentinel labels (bitwise natural-K trajectories),
@@ -36,17 +48,23 @@ import heapq
 import math
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Union
+from typing import Dict, List, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.api.config import ExecutionConfig
+from repro.api.errors import FallbackError, RequestError
 from repro.api.session import BucketKey, Plan, Segmenter
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import pipeline as pipeline_mod
+from repro.testing import chaos as chaos_mod
+from repro.training.fault import StragglerWatchdog
 
 _INF = math.inf
+
+#: Completion statuses that mean "the result is a legitimate segmentation".
+OK_COMPLETION_STATUSES = ("converged", "max_iters")
 
 
 @dataclass
@@ -67,7 +85,17 @@ class SegRequest:
 
 @dataclass
 class SegCompletion:
-    """A finished request with its result and latency accounting."""
+    """A finished request with its result, health, and latency accounting.
+
+    ``status`` is the engine's disposition of the request: the lane's
+    device-reported health (``"converged"`` / ``"max_iters"`` /
+    ``"diverged"`` / ``"degenerate"``, see ``em.STATUS_NAMES``) for a
+    naturally retired lane, or ``"evicted"`` for a lane the engine force-
+    retired (per-lane ``max_ticks_resident`` or the global ``run()`` cap).
+    ``result`` is always present — for an error completion it holds the
+    lane's last state (labels are always finite ints; parameters may be
+    non-finite for a diverged lane).
+    """
 
     rid: int
     result: pipeline_mod.SegmentationResult
@@ -76,6 +104,11 @@ class SegCompletion:
     service_s: float        # admit -> retire (time resident in a lane)
     ticks_resident: int
     slot: int
+    status: str = "converged"
+
+    @property
+    def ok(self) -> bool:
+        return self.status in OK_COMPLETION_STATUSES
 
 
 class SegmentationEngine:
@@ -93,7 +126,12 @@ class SegmentationEngine:
     let the engine take the elementwise max over the requests pending at
     first tick.  Later submissions must fit that bucket (padding up is
     fine; exceeding it raises — recompile a new engine for bigger work).
-    Thread-unsafe by design, like the :class:`Segmenter` it drives.
+    ``max_ticks_resident`` bounds how long any single lane may occupy a
+    slot (default: the ticks a worst-case ``max_em_iters x max_map_iters``
+    run needs, plus slack) — a lane exceeding it is force-retired as an
+    ``"evicted"`` error completion, so one pathological request can never
+    starve the pool.  Thread-unsafe by design, like the
+    :class:`Segmenter` it drives.
     """
 
     def __init__(
@@ -103,6 +141,8 @@ class SegmentationEngine:
         max_batch: int = 8,
         tick_iters: int = 8,
         bucket: Optional[BucketKey] = None,
+        max_ticks_resident: Optional[int] = None,
+        watchdog: Optional[StragglerWatchdog] = None,
     ):
         if session is None:
             session = Segmenter(ExecutionConfig())
@@ -121,6 +161,20 @@ class SegmentationEngine:
         self.bucket: Optional[BucketKey] = (
             BucketKey(*bucket) if bucket is not None else None
         )
+        if max_ticks_resident is None:
+            # Worst-case resident ticks for a healthy lane: every micro-step
+            # advances the MAP loop, so a full run is at most
+            # max_em_iters * max_map_iters micro-steps; +2 ticks of slack
+            # for boundary granularity.  Anything beyond this is a lane
+            # that cannot make progress.
+            cfg = session.config
+            max_ticks_resident = (
+                -(-cfg.max_em_iters * cfg.max_map_iters // tick_iters) + 2
+            )
+        if max_ticks_resident < 1:
+            raise ValueError("max_ticks_resident must be >= 1")
+        self.max_ticks_resident = max_ticks_resident
+        self.watchdog = watchdog if watchdog is not None else StragglerWatchdog()
 
         self._heap: List[tuple] = []   # (deadline key, seq, SegRequest)
         self._seq = 0
@@ -131,14 +185,37 @@ class SegmentationEngine:
         self.slot_req: List[Optional[SegRequest]] = [None] * max_batch
         self._slot_admit_s = np.zeros(max_batch, np.float64)
         self._slot_admit_tick = np.zeros(max_batch, np.int64)
+        self._slot_hold = [False] * max_batch   # chaos: never-converge lanes
         self.completions: List[SegCompletion] = []
         self.ticks = 0
         self.admitted = 0
+        self.evicted = 0
+        self.error_completions = 0
         self.lane_steps = 0            # occupied-lane micro-steps issued
+        self.fallback_events: List[Dict] = []
 
     # ------------------------------------------------------------------
     # submission (deadline-ordered queue)
     # ------------------------------------------------------------------
+
+    def _validate_plan(self, plan: Plan) -> None:
+        """Admission validation (DESIGN.md §14): a request that would
+        poison its lane is rejected here, before it costs a slot.  Images
+        were already validated by ``Segmenter.plan``; this guards prepared
+        :class:`Plan` objects (and post-plan corruption)."""
+        model = plan.problem.model
+        for name in ("region_mean", "region_weight"):
+            arr = np.asarray(getattr(model, name))
+            if not np.isfinite(arr).all():
+                bad = int(arr.size - np.isfinite(arr).sum())
+                raise RequestError(
+                    f"plan model {name} contains {bad} non-finite value(s); "
+                    "the lane's first energy evaluation would diverge"
+                )
+        if not (
+            np.isfinite(float(model.beta)) and np.isfinite(float(model.sigma_min))
+        ):
+            raise RequestError("plan model beta/sigma_min must be finite")
 
     def submit(
         self,
@@ -150,20 +227,26 @@ class SegmentationEngine:
     ) -> int:
         """Enqueue a request (image or prepared :class:`Plan`); returns its
         rid.  ``deadline_s`` is seconds from now; earlier deadlines are
-        admitted first (FIFO among equals)."""
+        admitted first (FIFO among equals).  Invalid requests raise typed
+        errors (``PlanError`` for unusable images, :class:`RequestError`
+        for plans failing admission validation) and never enter the queue.
+        """
         plan = (
             image_or_plan
             if isinstance(image_or_plan, Plan)
             else self.session.plan(image_or_plan)
         )
+        self._validate_plan(plan)
+        if deadline_s is not None and not math.isfinite(deadline_s):
+            raise RequestError(f"deadline_s must be finite, got {deadline_s!r}")
         if self.bucket is not None and not _fits(plan.bucket, self.bucket):
-            raise ValueError(
+            raise RequestError(
                 f"request bucket {tuple(plan.bucket)} exceeds the engine's "
                 f"fixed pool bucket {tuple(self.bucket)}"
             )
         plan_labels = plan.problem.model.n_labels
         if plan_labels > self.session.config.n_labels:
-            raise ValueError(
+            raise RequestError(
                 f"request has {plan_labels} labels but the pool serves "
                 f"n_labels={self.session.config.n_labels}; smaller-K "
                 "requests are label-padded with inert labels, larger-K "
@@ -175,7 +258,7 @@ class SegmentationEngine:
             rid = self._auto_rid
             self._auto_rid += 1
         elif rid in self._live_rids:
-            raise ValueError(
+            raise RequestError(
                 f"rid {rid} is already queued or in flight; completions are "
                 "keyed by rid, so live rids must be unique"
             )
@@ -234,6 +317,29 @@ class SegmentationEngine:
         self._read_lane = jax.jit(
             lambda state, slot: jax.tree.map(lambda x: x[slot], state)
         )
+        # Slot-local state surgery (quarantine/chaos paths): mark one lane
+        # done (eviction), or reset one lane's progress + nudge its mu
+        # (chaos never-converge hold).  Both are per-slot writes — other
+        # lanes' leaves pass through untouched, preserving bit-identity.
+        self._mark_done = jax.jit(
+            lambda state, slot: state._replace(
+                done=state.done.at[slot].set(True)
+            ),
+            donate_argnums=(0,),
+        )
+        self._hold_lane_op = jax.jit(
+            lambda state, slot, dmu: state._replace(
+                mu=state.mu.at[slot].add(dmu),
+                map_hist=state.map_hist.at[slot].set(0.0),
+                map_i=state.map_i.at[slot].set(0),
+                map_done=state.map_done.at[slot].set(False),
+                total_hist=state.total_hist.at[slot].set(0.0),
+                em_i=state.em_i.at[slot].set(0),
+                done=state.done.at[slot].set(False),
+                status=state.status.at[slot].set(em_mod.STATUS_OK),
+            ),
+            donate_argnums=(0,),
+        )
 
     def _admit(self) -> int:
         """Fill free slots from the queue in deadline order.  Pure data
@@ -248,6 +354,15 @@ class SegmentationEngine:
             h1, m1, lab0, mu0, sig0 = self.session.lane_inputs(
                 req.plan, bucket=self.bucket, seed=req.seed
             )
+            hold = False
+            if chaos_mod.is_active():
+                # Post-validation corruption hooks (DESIGN.md §14): the
+                # chaos harness returns fresh arrays, never mutates the
+                # plan's memoized inputs.
+                m1, lab0, mu0, sig0 = chaos_mod.on_admit(
+                    req.rid, m1, lab0, mu0, sig0
+                )
+                hold = chaos_mod.hold_lane(req.rid)
             lane = em_mod.init_tick_lane(lab0, mu0, sig0, self.bucket.n_hoods)
             vplan = em_mod.make_vote_plan(h1.vertex, self.bucket.n_regions)
             self._hoods, self._model, self._state, self._vote_plan = (
@@ -260,76 +375,185 @@ class SegmentationEngine:
             self.slot_req[slot] = req
             self._slot_admit_s[slot] = now
             self._slot_admit_tick[slot] = self.ticks
+            self._slot_hold[slot] = hold
             self.admitted += 1
             admitted += 1
         return admitted
 
-    def _retire(self) -> int:
-        """Drain finished lanes: the only device->host sync per tick is the
-        (max_batch,) ``done`` vector; full lane state is fetched only for
-        lanes actually retiring."""
-        done = np.asarray(self._state.done)
+    def _complete_slot(self, slot: int, status: Optional[str] = None) -> None:
+        """Assemble a completion from a slot's current lane state and free
+        the slot.  ``status=None`` takes the lane's device-reported health
+        (natural retirement); an explicit string marks an engine-side
+        disposition (``"evicted"``)."""
+        req = self.slot_req[slot]
+        now = time.perf_counter()
+        res = em_mod.tick_result(self._read_lane(self._state, slot))
+        service_s = now - self._slot_admit_s[slot]
+        result = pipeline_mod._assemble_result(
+            req.plan.problem, res, req.plan.init_seconds, service_s
+        )
+        completion_status = result.status if status is None else status
+        if completion_status not in OK_COMPLETION_STATUSES:
+            self.error_completions += 1
+        self.completions.append(
+            SegCompletion(
+                rid=req.rid,
+                result=result,
+                latency_s=now - req.submitted_s,
+                queue_s=self._slot_admit_s[slot] - req.submitted_s,
+                service_s=service_s,
+                ticks_resident=int(self.ticks - self._slot_admit_tick[slot]),
+                slot=slot,
+                status=completion_status,
+            )
+        )
+        self.slot_req[slot] = None
+        self._slot_hold[slot] = False
+        self._live_rids.discard(req.rid)
+
+    def _retire(self, done: Optional[np.ndarray] = None) -> int:
+        """Drain finished lanes — converged AND quarantined: a diverged or
+        degenerate lane set ``done`` device-side and froze, so sick lanes
+        leave through this exact path as error-status completions.  The
+        per-tick device->host sync is the (max_batch,) ``done`` vector;
+        full lane state is fetched only for lanes actually retiring."""
+        if done is None:
+            done = np.asarray(self._state.done)
         retired = 0
         for slot in range(self.max_batch):
-            req = self.slot_req[slot]
-            if req is None or not done[slot]:
+            if self.slot_req[slot] is None or not done[slot]:
                 continue
-            now = time.perf_counter()
-            res = em_mod.tick_result(self._read_lane(self._state, slot))
-            service_s = now - self._slot_admit_s[slot]
-            result = pipeline_mod._assemble_result(
-                req.plan.problem, res, req.plan.init_seconds, service_s
-            )
-            self.completions.append(
-                SegCompletion(
-                    rid=req.rid,
-                    result=result,
-                    latency_s=now - req.submitted_s,
-                    queue_s=self._slot_admit_s[slot] - req.submitted_s,
-                    service_s=service_s,
-                    ticks_resident=int(self.ticks - self._slot_admit_tick[slot]),
-                    slot=slot,
-                )
-            )
-            self.slot_req[slot] = None
-            self._live_rids.discard(req.rid)
+            self._complete_slot(slot)
             retired += 1
         return retired
+
+    def _evict_overstayers(self) -> int:
+        """Force-retire lanes resident beyond ``max_ticks_resident`` as
+        ``"evicted"`` error completions (DESIGN.md §14).  The lane's pool
+        slot is marked ``done`` device-side (a slot-local write), so it
+        freezes and frees up for the next admission."""
+        evicted = 0
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None:
+                continue
+            if self.ticks - self._slot_admit_tick[slot] < self.max_ticks_resident:
+                continue
+            self._state = self._mark_done(self._state, slot)
+            self._complete_slot(slot, status="evicted")
+            self.evicted += 1
+            evicted += 1
+        return evicted
 
     # ------------------------------------------------------------------
     # the tick
     # ------------------------------------------------------------------
 
+    def _try_tick(self):
+        chaos_mod.on_execute(self._exe.key.backend)
+        return self._exe(self._hoods, self._model, self._state, self._vote_plan)
+
+    def _advance_pool(self):
+        """One ticked-executable call under the session's fallback policy
+        (DESIGN.md §14): execute failures retry same-backend with capped
+        exponential backoff, then recompile the pool program on the
+        fallback backend and replay the tick.  Pool state is untouched by
+        a failed call (the ticked program donates nothing), so the replay
+        is exact."""
+        policy = self.session.config.fallback
+        delay = policy.backoff_s
+        err = None
+        for attempt in range(policy.max_retries + 1):
+            try:
+                return self._try_tick()
+            except Exception as e:   # noqa: BLE001 — fault boundary
+                err = e
+                if attempt < policy.max_retries:
+                    time.sleep(min(delay, policy.max_backoff_s))
+                    delay *= 2
+        if not (policy.enabled and self._exe.key.backend != policy.backend):
+            raise err
+        self.fallback_events.append(
+            {
+                "stage": "tick",
+                "from": self._exe.key.backend,
+                "to": policy.backend,
+                "error": repr(err),
+            }
+        )
+        self._exe = self.session.compile_ticked(
+            self.bucket,
+            batch=self.max_batch,
+            tick_iters=self.tick_iters,
+            backend=policy.backend,
+        )
+        try:
+            return self._try_tick()
+        except Exception as fb_e:   # noqa: BLE001
+            raise FallbackError(
+                f"tick failed on {self.fallback_events[-1]['from']!r} and on "
+                f"fallback backend {policy.backend!r}"
+            ) from fb_e
+
     def step(self) -> int:
         """One engine tick: admit, advance every live lane by
-        ``tick_iters`` micro-steps, retire.  Returns the number of lanes
-        that were advanced (0 = nothing to do)."""
+        ``tick_iters`` micro-steps, retire finished/quarantined lanes,
+        evict overstayers.  Returns the number of lanes advanced (0 =
+        nothing to do)."""
         if self._heap:
             self._ensure_pool()
             self._admit()
         n_active = self.active()
         if n_active == 0:
             return 0
-        self._state = self._exe(
-            self._hoods, self._model, self._state, self._vote_plan
-        )
+        t0 = time.perf_counter()
+        chaos_mod.on_tick(self.ticks)
+        self._state = self._advance_pool()
+        done = np.array(self._state.done)   # the per-tick sync point (host copy)
+        self.watchdog.observe(self.ticks, time.perf_counter() - t0)
         self.ticks += 1
         self.lane_steps += n_active * self.tick_iters
-        self._retire()
+        # Chaos never-converge holds: reset held lanes' progress before
+        # retirement so they can only leave via eviction.  Slot-local
+        # writes — co-resident lanes stay bitwise untouched.
+        for slot in range(self.max_batch):
+            if self._slot_hold[slot] and self.slot_req[slot] is not None:
+                req = self.slot_req[slot]
+                dmu = chaos_mod.monkey().hold_perturbation(
+                    req.rid, self.ticks, int(np.asarray(self._state.mu).shape[1])
+                )
+                self._state = self._hold_lane_op(self._state, slot, dmu)
+                done[slot] = False
+        self._retire(done)
+        self._evict_overstayers()
         return n_active
 
     def run(self, max_ticks: int = 1_000_000) -> List[SegCompletion]:
         """Drive until queue and pool are empty; returns (and clears) the
-        completions, in retirement order."""
+        completions, in retirement order.
+
+        Hitting ``max_ticks`` no longer raises (DESIGN.md §14): finished
+        lanes have already retired through :meth:`step`, and remaining
+        residents are force-retired as ``"evicted"`` error completions —
+        partial results and all latency accounting are preserved.  (With
+        per-lane ``max_ticks_resident`` eviction, the global cap is only
+        reachable through sustained oversubscription.)  Still-queued
+        requests stay queued; ``run()`` again continues them.
+        """
         while self._heap or self.active():
             if self.ticks >= max_ticks:
-                raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
+                for slot in range(self.max_batch):
+                    if self.slot_req[slot] is not None:
+                        self._state = self._mark_done(self._state, slot)
+                        self._complete_slot(slot, status="evicted")
+                        self.evicted += 1
+                break
             self.step()
         done, self.completions = self.completions, []
         return done
 
     def stats(self) -> dict:
-        """Occupancy/throughput counters for benchmarks and smoke checks."""
+        """Occupancy/throughput/health counters for benchmarks and smoke
+        checks."""
         cap = max(self.ticks * self.max_batch * self.tick_iters, 1)
         return {
             "ticks": self.ticks,
@@ -338,6 +562,10 @@ class SegmentationEngine:
             "admitted": self.admitted,
             "lane_steps": self.lane_steps,
             "occupancy": round(self.lane_steps / cap, 4),
+            "evicted": self.evicted,
+            "error_completions": self.error_completions,
+            "straggler_events": len(self.watchdog.events),
+            "fallbacks": len(self.fallback_events),
         }
 
 

@@ -1,0 +1,7 @@
+"""Deterministic fault-injection tooling (DESIGN.md §14).
+
+``repro.testing.chaos`` is the seeded chaos harness used by
+``launch/serve.py --chaos`` and ``tests/test_chaos.py``.  It lives outside
+``tests/`` because library code (session, engine) consults its hooks —
+every hook is a no-op unless a :func:`chaos.inject` context is active.
+"""

@@ -1,0 +1,231 @@
+"""Deterministic chaos harness: seeded fault injection for the serving
+stack (DESIGN.md §14).
+
+The harness is a module-level context: :func:`inject` activates a
+:class:`ChaosMonkey` built from a frozen :class:`ChaosConfig`; library
+code (``api/session.py``, ``serving/engine.py``) consults the module
+hooks at well-defined points, and every hook is a **no-op when no context
+is active** — production traffic never pays for the harness.
+
+Fault classes (each deterministic in ``(seed, rid)`` / ``(seed, tick)``,
+so a chaos run is exactly reproducible):
+
+* ``nan_image`` — harness-side: :func:`poison_image` NaNs pixels so
+  ``Segmenter.plan`` / ``submit`` rejects with ``PlanError`` (the
+  cheapest quarantine: the request never reaches a device).
+* ``bad_init`` — :func:`on_admit` NaNs a lane's initial ``mu`` *after*
+  submit validation, modeling post-validation corruption; the lane's
+  first energies are non-finite and the device marks it ``DIVERGED``.
+* ``nan_data`` — :func:`on_admit` NaNs part of the lane's padded region
+  means; same device-side ``DIVERGED`` detection, via the data term.
+* ``never_converge`` — :func:`hold_lane` marks the request; the engine
+  perturbs the lane's parameters and resets its progress counters every
+  tick (:func:`hold_perturbation`), so the lane can never satisfy a
+  convergence window and must be evicted by ``max_ticks_resident``.
+* ``compile_fail`` — :func:`on_compile` raises :class:`ChaosError` for
+  the configured backends, exercising the ``FallbackPolicy`` retry +
+  backend-fallback path.
+* ``exec_fail`` / ``transient_exec_failures`` — :func:`on_execute`
+  raises persistently per backend, or for the first N calls (transient),
+  exercising the capped-backoff retry and execute-time fallback.
+* ``slow_tick`` — :func:`on_tick` sleeps every Nth engine tick,
+  exercising the tick-time straggler watchdog.
+
+Imports only numpy + stdlib, so any layer may import it without cycles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: Fault-class names a request can be assigned (see module docstring).
+REQUEST_FAULTS = ("nan_image", "bad_init", "nan_data", "never_converge")
+
+
+class ChaosError(RuntimeError):
+    """An injected (not organic) failure — compile or execute."""
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault plan.  Rates draw one uniform per rid (deterministic
+    in ``(seed, rid)``); the ``*_rids`` tuples force specific requests
+    (benchmarks use these for exact poison fractions)."""
+
+    seed: int = 0
+    # Bernoulli fault rates per request (disjoint: one draw, partitioned).
+    nan_image_rate: float = 0.0
+    bad_init_rate: float = 0.0
+    nan_data_rate: float = 0.0
+    never_converge_rate: float = 0.0
+    # Explicit per-fault rid assignments (checked before the rate draw).
+    nan_image_rids: Tuple[int, ...] = ()
+    bad_init_rids: Tuple[int, ...] = ()
+    nan_data_rids: Tuple[int, ...] = ()
+    never_converge_rids: Tuple[int, ...] = ()
+    # Compile / execute failures.
+    compile_fail_backends: Tuple[str, ...] = ()
+    exec_fail_backends: Tuple[str, ...] = ()
+    transient_exec_failures: int = 0   # first N on_execute calls raise
+    # Slow-tick injection (straggler watchdog exercise).
+    slow_tick_every: int = 0           # 0 = off; else every Nth tick sleeps
+    slow_tick_s: float = 0.0
+
+
+class ChaosMonkey:
+    """Active fault injector; records every injection in ``events``."""
+
+    def __init__(self, config: ChaosConfig):
+        self.config = config
+        self.events: List[Dict] = []
+        self._exec_failures_left = int(config.transient_exec_failures)
+
+    # -- deterministic assignment --------------------------------------
+
+    def _draw(self, rid: int) -> float:
+        return float(np.random.default_rng((self.config.seed, rid)).random())
+
+    def fault_for_request(self, rid: int) -> Optional[str]:
+        """The fault class assigned to ``rid`` (None = healthy).
+        Explicit rid lists win; otherwise one uniform draw is partitioned
+        across the four rates (so classes are mutually exclusive)."""
+        c = self.config
+        for name in REQUEST_FAULTS:
+            if rid in getattr(c, f"{name}_rids"):
+                return name
+        u = self._draw(rid)
+        lo = 0.0
+        for name in REQUEST_FAULTS:
+            hi = lo + getattr(c, f"{name}_rate")
+            if lo <= u < hi:
+                return name
+            lo = hi
+        return None
+
+    def _record(self, kind: str, **info) -> None:
+        self.events.append({"kind": kind, **info})
+
+    # -- hooks ----------------------------------------------------------
+
+    def on_admit(self, rid: int, model, labels0, mu0, sigma0):
+        """Corrupt a lane's admission inputs per its assigned fault.
+        Returns (model, labels0, mu0, sigma0); builds new arrays, never
+        mutates (the inputs are memoized on the plan)."""
+        fault = self.fault_for_request(rid)
+        if fault == "bad_init":
+            mu0 = np.full_like(np.asarray(mu0), np.nan)
+            self._record("bad_init", rid=rid)
+        elif fault == "nan_data":
+            mean = np.array(np.asarray(model.region_mean), copy=True)
+            rng = np.random.default_rng((self.config.seed, rid, 1))
+            n = max(1, mean.shape[-1] // 8)
+            idx = rng.choice(max(mean.shape[-1] - 1, 1), size=n, replace=False)
+            mean[..., idx] = np.nan
+            model = model._replace(region_mean=mean)
+            self._record("nan_data", rid=rid)
+        return model, labels0, mu0, sigma0
+
+    def hold_lane(self, rid: int) -> bool:
+        held = self.fault_for_request(rid) == "never_converge"
+        if held:
+            self._record("never_converge", rid=rid)
+        return held
+
+    def hold_perturbation(self, rid: int, tick: int, k: int) -> np.ndarray:
+        """Finite per-tick mu perturbation for a held lane — keeps its
+        energy field moving so no convergence window can close."""
+        rng = np.random.default_rng((self.config.seed, rid, tick, 2))
+        return (rng.standard_normal(k) * 3.0).astype(np.float32)
+
+    def on_compile(self, backend: str) -> None:
+        if backend in self.config.compile_fail_backends:
+            self._record("compile_fail", backend=backend)
+            raise ChaosError(f"injected compile failure for backend {backend!r}")
+
+    def on_execute(self, backend: str) -> None:
+        if self._exec_failures_left > 0:
+            self._exec_failures_left -= 1
+            self._record("transient_exec_fail", backend=backend)
+            raise ChaosError("injected transient execute failure")
+        if backend in self.config.exec_fail_backends:
+            self._record("exec_fail", backend=backend)
+            raise ChaosError(f"injected execute failure for backend {backend!r}")
+
+    def on_tick(self, tick: int) -> None:
+        c = self.config
+        if c.slow_tick_every > 0 and tick % c.slow_tick_every == 0:
+            self._record("slow_tick", tick=tick, seconds=c.slow_tick_s)
+            time.sleep(c.slow_tick_s)
+
+    # -- harness-side helpers -------------------------------------------
+
+    def poison_image(self, image, rid: int) -> np.ndarray:
+        """NaN a deterministic pixel subset (the ``nan_image`` class —
+        callers submit the poisoned image and expect ``PlanError``)."""
+        img = np.array(np.asarray(image), dtype=np.float32, copy=True)
+        rng = np.random.default_rng((self.config.seed, rid, 3))
+        flat = img.reshape(-1)
+        idx = rng.choice(flat.size, size=max(1, flat.size // 64), replace=False)
+        flat[idx] = np.nan
+        self._record("nan_image", rid=rid)
+        return img
+
+
+# ---------------------------------------------------------------------------
+# module-level context (what library hooks consult)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[ChaosMonkey] = None
+
+
+def is_active() -> bool:
+    return _ACTIVE is not None
+
+
+def monkey() -> Optional[ChaosMonkey]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(config: ChaosConfig):
+    """Activate a chaos context; yields the :class:`ChaosMonkey` so the
+    caller can query fault assignments and inspect ``events``.  Nested
+    contexts stack (the innermost wins)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, ChaosMonkey(config)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+# no-op-unless-active hook shims (the only surface library code calls)
+
+def on_admit(rid, model, labels0, mu0, sigma0):
+    if _ACTIVE is None:
+        return model, labels0, mu0, sigma0
+    return _ACTIVE.on_admit(rid, model, labels0, mu0, sigma0)
+
+
+def hold_lane(rid: int) -> bool:
+    return _ACTIVE is not None and _ACTIVE.hold_lane(rid)
+
+
+def on_compile(backend: str) -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.on_compile(backend)
+
+
+def on_execute(backend: str) -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.on_execute(backend)
+
+
+def on_tick(tick: int) -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.on_tick(tick)

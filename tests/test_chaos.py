@@ -1,0 +1,267 @@
+"""Chaos-harness tests: fault injection vs the serving stack (DESIGN.md §14).
+
+The fault-tolerance acceptance bar: under every fault class the engine
+drains (never raises, never wedges), each poisoned request is disposed of
+with a typed error status (rejected / diverged / degenerate / evicted),
+and — the core quarantine property — healthy co-resident lanes are
+**bit-identical** to the same stream served with no chaos context at all.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import synthetic
+from repro.serving import SegmentationEngine
+from repro.serving.engine import SegCompletion
+from repro.testing import chaos
+
+
+def _session(**overrides):
+    # Quantile init: deterministic, and separates the synthetic phantoms'
+    # modes reliably (random init can genuinely collapse -> degenerate,
+    # which is its own test, not wanted as background noise here).
+    kwargs = dict(overseg_grid=(6, 6), capacity_bucket=2048, init="quantile")
+    kwargs.update(overrides)
+    return api.Segmenter(api.ExecutionConfig(**kwargs))
+
+
+def _plans(sess, n=5, shape=(40, 40), seed=5):
+    vol = synthetic.make_synthetic_volume(seed=seed, n_slices=n, shape=shape)
+    return [sess.plan(np.asarray(im)) for im in vol.images]
+
+
+def _serve(sess, plans, faults=None, **engine_kw):
+    """Run the stream through a fresh engine, optionally under chaos."""
+    engine = SegmentationEngine(sess, max_batch=2, tick_iters=4, **engine_kw)
+    cfg = chaos.ChaosConfig(seed=7, **(faults or {}))
+    with chaos.inject(cfg):
+        for rid, p in enumerate(plans):
+            engine.submit(p, rid=rid, seed=0)
+        comps = engine.run()
+    return engine, {c.rid: c for c in comps}
+
+
+# ---------------------------------------------------------------------------
+# harness determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_assignment_is_deterministic_and_partitioned():
+    cfg = chaos.ChaosConfig(seed=3, bad_init_rate=0.3, nan_data_rate=0.3)
+    a = [chaos.ChaosMonkey(cfg).fault_for_request(r) for r in range(50)]
+    b = [chaos.ChaosMonkey(cfg).fault_for_request(r) for r in range(50)]
+    assert a == b
+    assert set(a) <= {None, "bad_init", "nan_data"}
+    assert a.count("bad_init") > 0 and a.count("nan_data") > 0
+    # explicit rid lists override the rate draw
+    cfg2 = chaos.ChaosConfig(seed=3, never_converge_rids=(4,))
+    assert chaos.ChaosMonkey(cfg2).fault_for_request(4) == "never_converge"
+
+
+def test_hooks_are_noops_without_context():
+    assert not chaos.is_active()
+    model = object()
+    assert chaos.on_admit(0, model, 1, 2, 3) == (model, 1, 2, 3)
+    assert chaos.hold_lane(0) is False
+    chaos.on_compile("xla")
+    chaos.on_execute("xla")
+    chaos.on_tick(0)
+
+
+def test_inject_stacks_and_restores():
+    with chaos.inject(chaos.ChaosConfig(seed=1)) as outer:
+        assert chaos.monkey() is outer
+        with chaos.inject(chaos.ChaosConfig(seed=2)) as inner:
+            assert chaos.monkey() is inner
+        assert chaos.monkey() is outer
+    assert not chaos.is_active()
+
+
+# ---------------------------------------------------------------------------
+# request validation (the cheapest quarantine: never reaches a device)
+# ---------------------------------------------------------------------------
+
+def test_plan_rejects_nan_image_with_plan_error():
+    sess = _session()
+    img = np.full((32, 32), 5.0, np.float32)
+    img[3, 4] = np.nan
+    with pytest.raises(api.PlanError, match="non-finite"):
+        sess.plan(img)
+    with pytest.raises(api.PlanError):
+        sess.plan(np.zeros((0, 0), np.float32))
+    # PlanError is a ValueError: pre-existing callers' handlers still work.
+    assert issubclass(api.PlanError, ValueError)
+
+
+def test_submit_rejects_corrupted_plan_with_request_error():
+    sess = _session()
+    [plan] = _plans(sess, n=1)
+    mean = np.array(plan.problem.model.region_mean, copy=True)
+    mean[0] = np.inf
+    bad = dataclasses.replace(
+        plan,
+        problem=dataclasses.replace(
+            plan.problem, model=plan.problem.model._replace(region_mean=mean)
+        ),
+    )
+    engine = SegmentationEngine(sess, max_batch=2, tick_iters=4)
+    with pytest.raises(api.RequestError, match="region_mean"):
+        engine.submit(bad)
+    with pytest.raises(api.RequestError, match="deadline"):
+        engine.submit(plan, deadline_s=float("nan"))
+    assert engine.pending() == 0  # nothing entered the queue
+
+
+# ---------------------------------------------------------------------------
+# quarantine: poisoned lanes retire as error completions, healthy lanes
+# are bit-identical to a fault-free run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_poisoned_lanes_quarantined_healthy_lanes_bit_identical():
+    sess = _session()
+    plans = _plans(sess)
+    _, clean = _serve(sess, plans)
+    assert all(c.status == "converged" and c.ok for c in clean.values())
+
+    for fault_kw, want_status in [
+        ({"bad_init_rids": (1,)}, "diverged"),
+        ({"nan_data_rids": (1,)}, "diverged"),
+    ]:
+        engine, chaotic = _serve(sess, plans, faults=fault_kw)
+        assert sorted(chaotic) == sorted(clean), "engine drained every request"
+        assert chaotic[1].status == want_status and not chaotic[1].ok
+        # a diverged lane is caught at its first EM boundary
+        assert chaotic[1].result.em_iters <= 1
+        assert engine.stats()["error_completions"] == 1
+        for rid, c in chaotic.items():
+            if rid == 1:
+                continue
+            a, b = clean[rid].result, c.result
+            np.testing.assert_array_equal(a.region_labels, b.region_labels)
+            np.testing.assert_array_equal(a.segmentation, b.segmentation)
+            np.testing.assert_array_equal(a.mu, b.mu)
+            np.testing.assert_array_equal(a.sigma, b.sigma)
+            assert a.em_iters == b.em_iters and a.status == b.status
+
+
+@pytest.mark.slow
+def test_never_converging_lane_is_evicted_not_wedged():
+    sess = _session()
+    plans = _plans(sess, n=3)
+    _, clean = _serve(sess, plans)
+    engine, chaotic = _serve(
+        sess, plans,
+        faults={"never_converge_rids": (0,)},
+        max_ticks_resident=15,
+    )
+    assert chaotic[0].status == "evicted" and not chaotic[0].ok
+    assert chaotic[0].ticks_resident == 15
+    assert engine.stats()["evicted"] == 1
+    for rid in (1, 2):
+        np.testing.assert_array_equal(
+            clean[rid].result.mu, chaotic[rid].result.mu
+        )
+        assert chaotic[rid].status == "converged"
+
+
+@pytest.mark.slow
+def test_run_max_ticks_drains_instead_of_raising():
+    sess = _session()
+    plans = _plans(sess, n=3)
+    engine = SegmentationEngine(sess, max_batch=2, tick_iters=4)
+    for rid, p in enumerate(plans):
+        engine.submit(p, rid=rid, seed=0)
+    comps = engine.run(max_ticks=1)  # used to raise RuntimeError
+    assert all(isinstance(c, SegCompletion) for c in comps)
+    assert {c.status for c in comps} == {"evicted"}
+    assert engine.pending() == 1  # third request stays queued...
+    comps2 = engine.run()         # ...and a later run() serves it
+    assert [c.rid for c in comps2] == [2] and comps2[0].status == "converged"
+
+
+# ---------------------------------------------------------------------------
+# compile/execute fallback (FallbackPolicy)
+# ---------------------------------------------------------------------------
+
+def test_compile_failure_falls_back_to_xla_with_own_cache_key():
+    sess = _session(backend="pallas-interpret", mode="static-pallas")
+    [plan] = _plans(sess, n=1)
+    with chaos.inject(chaos.ChaosConfig(compile_fail_backends=("pallas-interpret",))):
+        with pytest.warns(RuntimeWarning, match="falling back to 'xla'"):
+            exe = sess.compile(plan.bucket)
+    assert exe.key.backend == "xla"
+    assert all(k.backend == "xla" for k in sess._cache)
+    assert sess.fallback_events and sess.fallback_events[0]["stage"] == "compile"
+    # warm path: the redirect routes straight to the fallback executable,
+    # no new compile, no new fallback event
+    with chaos.inject(chaos.ChaosConfig(compile_fail_backends=("pallas-interpret",))):
+        exe2 = sess.compile(plan.bucket)
+    assert exe2 is exe and len(sess.fallback_events) == 1
+    assert sess.stats.hits == 1
+
+
+def test_double_compile_failure_raises_fallback_error():
+    sess = _session(backend="pallas-interpret", mode="static-pallas")
+    [plan] = _plans(sess, n=1)
+    cfg = chaos.ChaosConfig(compile_fail_backends=("pallas-interpret", "xla"))
+    with chaos.inject(cfg), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(api.FallbackError, match="fallback backend"):
+            sess.compile(plan.bucket)
+
+
+def test_fallback_disabled_reraises_original_error():
+    policy = api.FallbackPolicy(enabled=False, max_retries=0)
+    sess = _session(
+        backend="pallas-interpret", mode="static-pallas", fallback=policy
+    )
+    [plan] = _plans(sess, n=1)
+    with chaos.inject(chaos.ChaosConfig(compile_fail_backends=("pallas-interpret",))):
+        with pytest.raises(chaos.ChaosError):
+            sess.compile(plan.bucket)
+    assert not sess.fallback_events
+
+
+def test_transient_execute_failure_is_retried_same_backend():
+    sess = _session()
+    [plan] = _plans(sess, n=1)
+    want = sess.execute(plan, seed=0)
+    with chaos.inject(chaos.ChaosConfig(transient_exec_failures=1)) as monkey:
+        got = sess.execute(plan, seed=0)
+    assert [e["kind"] for e in monkey.events] == ["transient_exec_fail"]
+    assert not sess.fallback_events  # absorbed by the same-backend retry
+    np.testing.assert_array_equal(want.region_labels, got.region_labels)
+
+
+@pytest.mark.slow
+def test_engine_tick_transient_failure_is_absorbed():
+    sess = _session()
+    plans = _plans(sess, n=2)
+    _, clean = _serve(sess, plans)
+    engine, chaotic = _serve(sess, plans, faults={"transient_exec_failures": 1})
+    assert engine.stats()["fallbacks"] == 0
+    for rid in chaotic:
+        np.testing.assert_array_equal(
+            clean[rid].result.region_labels, chaotic[rid].result.region_labels
+        )
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_slow_ticks_trip_the_straggler_watchdog():
+    sess = _session()
+    plans = _plans(sess, n=4)
+    engine, comps = _serve(
+        sess, plans, faults={"slow_tick_every": 4, "slow_tick_s": 0.25}
+    )
+    assert all(c.ok for c in comps.values())
+    assert engine.stats()["straggler_events"] > 0
+    ev = engine.watchdog.events[0]
+    assert ev["seconds"] > engine.watchdog.threshold * ev["ewma"]

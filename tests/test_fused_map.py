@@ -218,6 +218,7 @@ def test_fused_path_issues_fewer_launches_per_iteration():
         hood_energy=jnp.zeros((hoods.n_hoods,), jnp.float32),
         i=jnp.int32(0),
         done=jnp.bool_(False),
+        diverged=jnp.bool_(False),
     )
 
     def step(mode, backend, sctx):

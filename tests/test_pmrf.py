@@ -216,3 +216,87 @@ def test_em_converges_within_paper_budget():
     res = segment_image(img, overseg_grid=(6, 6), seed=0)
     assert res.em_iters <= 20  # the paper's observed convergence budget
     assert np.isfinite(res.total_energy)
+
+
+# ---------------------------------------------------------------------------
+# Health status lattice (DESIGN.md §14): diverged / degenerate detection
+# ---------------------------------------------------------------------------
+
+
+def test_healthy_run_reports_converged_status():
+    img, _ = _tiny_problem(seed=3)
+    problem = initialize(img, overseg_grid=(6, 6))
+    labels0, mu0, sigma0 = em_mod.init_params(
+        jax.random.PRNGKey(7), problem.graph.n_regions
+    )
+    res = run_em(problem.hoods, problem.model, labels0, mu0, sigma0, EMConfig())
+    assert int(res.status) == em_mod.STATUS_CONVERGED
+    assert em_mod.STATUS_NAMES[int(res.status)] == "converged"
+
+
+@pytest.mark.parametrize("mode", ["faithful", "static"])
+def test_nan_init_is_flagged_diverged_not_propagated(mode):
+    """Non-finite initial mu -> every energy is NaN; the run must terminate
+    at its first boundary with STATUS_DIVERGED instead of looping to the
+    iteration cap on NaN comparisons."""
+    img, _ = _tiny_problem(seed=3)
+    problem = initialize(img, overseg_grid=(6, 6))
+    labels0, mu0, sigma0 = em_mod.init_params(
+        jax.random.PRNGKey(7), problem.graph.n_regions
+    )
+    res = run_em(
+        problem.hoods, problem.model, labels0,
+        jnp.full_like(mu0, jnp.nan), sigma0, EMConfig(mode=mode),
+    )
+    assert int(res.status) == em_mod.STATUS_DIVERGED
+    assert int(res.em_iters) <= 1  # caught at the first EM boundary
+    # labels stay finite ints even though params are garbage
+    assert np.asarray(res.labels).dtype.kind == "i"
+
+
+def test_duplicate_mu_init_recovers_or_flags_never_nans():
+    """Both components seeded at the same mu (zero separation): the run
+    must end with finite parameters — either the reseed machinery recovers
+    a live two-component fit (CONVERGED/MAX_ITERS) or the collapse is
+    reported as DEGENERATE.  Silent NaN is the one forbidden outcome."""
+    img, _ = _tiny_problem(seed=3)
+    problem = initialize(img, overseg_grid=(6, 6))
+    labels0, _, sigma0 = em_mod.init_params(
+        jax.random.PRNGKey(7), problem.graph.n_regions
+    )
+    mu_dup = jnp.full_like(sigma0, float(np.asarray(img).mean()))
+    res = run_em(problem.hoods, problem.model, labels0, mu_dup, sigma0, EMConfig())
+    assert int(res.status) != em_mod.STATUS_DIVERGED
+    assert np.isfinite(np.asarray(res.mu)).all()
+    assert np.isfinite(np.asarray(res.sigma)).all()
+    assert np.isfinite(float(res.total_energy))
+
+
+def test_constant_image_collapse_is_flagged_degenerate():
+    """A zero-variance image with quantile init: both quantiles coincide,
+    one component ends massless with sigma pinned at sigma_min -> the
+    boundary check must report DEGENERATE with finite parameters (the
+    documented alternative is a successful reseed recovery; a constant
+    image leaves the reseed nothing to separate)."""
+    img = np.full((40, 40), 7.0, np.float32)
+    img += np.random.default_rng(0).normal(0, 1e-3, img.shape).astype(np.float32)
+    problem = initialize(img, overseg_grid=(6, 6))
+    labels0, mu0, sigma0 = em_mod.quantile_init(
+        problem.graph.region_mean, problem.graph.n_regions
+    )
+    res = run_em(problem.hoods, problem.model, labels0, mu0, sigma0, EMConfig())
+    assert int(res.status) == em_mod.STATUS_DEGENERATE
+    assert np.isfinite(np.asarray(res.mu)).all()
+    assert np.isfinite(np.asarray(res.sigma)).all()
+
+
+def test_two_phase_image_with_quantile_init_not_flagged():
+    """Degeneracy must not false-positive: a clean two-phase image with
+    well-separated quantile init converges with both components live."""
+    img, _ = _tiny_problem(seed=3)
+    problem = initialize(img, overseg_grid=(6, 6))
+    labels0, mu0, sigma0 = em_mod.quantile_init(
+        problem.graph.region_mean, problem.graph.n_regions
+    )
+    res = run_em(problem.hoods, problem.model, labels0, mu0, sigma0, EMConfig())
+    assert int(res.status) in (em_mod.STATUS_CONVERGED, em_mod.STATUS_MAX_ITERS)

@@ -44,6 +44,10 @@ def _assert_matches_serial(completion, want):
     np.testing.assert_array_equal(got.sigma, want.sigma)
     assert got.em_iters == want.em_iters
     assert got.map_iters == want.map_iters
+    # Health status rides the same parity (DESIGN.md §14): a lane reports
+    # exactly what serial run_em reports, and the completion mirrors it.
+    assert got.status == want.status
+    assert completion.status == want.status
     # Energies: fusion-context float noise only (DESIGN.md §12).
     np.testing.assert_allclose(
         got.total_energy, want.total_energy, rtol=1e-4
