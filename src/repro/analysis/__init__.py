@@ -1,0 +1,30 @@
+"""Static analysis for compiled executables (DESIGN.md §15).
+
+Three analyzers gate every executable the session layer produces:
+
+* :mod:`repro.analysis.jaxpr_lint` — dtype promotions, host callbacks
+  in loops, trace-baked constants, donation candidates, loop
+  gather/scatter census (JX codes);
+* :mod:`repro.analysis.pallas_check` — BlockSpec race / bounds /
+  divisibility verification for the registered Pallas kernels (PL codes);
+* :mod:`repro.analysis.budget` — the process-global counter ledger and
+  declared retrace/compile budgets (BG codes).  This module is also the
+  backing store for ``em.TRACE_COUNTS`` and the session/serving
+  counters, so it must import before jax-heavy siblings — keep this
+  ``__init__`` lightweight (the CLI imports the heavy passes lazily).
+
+Run the audit with ``python -m repro.analysis`` (see ``--help``).
+"""
+
+from .budget import BUDGETS, LEDGER, BudgetExceeded, expect, reset_all
+from .findings import Finding, Suppression
+
+__all__ = [
+    "BUDGETS",
+    "LEDGER",
+    "BudgetExceeded",
+    "expect",
+    "reset_all",
+    "Finding",
+    "Suppression",
+]

@@ -1,0 +1,241 @@
+"""Jaxpr auditor: walk a traced driver's ClosedJaxpr, flag defect
+candidates (DESIGN.md §15).
+
+Works on the *traced* program (``jitted.trace(*abstract).jaxpr``), which
+is cheap even at production shapes — tracing cost is independent of
+array sizes, so the donation lint can run against the same multi-MB
+avals the serving engine actually compiles.
+
+Detectors (codes in ``findings.py``):
+
+* ``JX001`` — implicit dtype promotions: same-kind widening converts
+  (f32→f64, i32→i64), and any >32-bit value anywhere (an x64 leak breaks
+  the golden oracle's bit-identity contract).
+* ``JX002`` — host callbacks / debug prints inside ``while``/``scan``
+  bodies (a per-iteration host round-trip).
+* ``JX003`` — closure constants above ``const_threshold`` bytes baked
+  into the trace (they silently re-embed per trace and defeat the
+  executable cache's dedup).
+* ``JX004`` — non-donated inputs whose aval exactly matches an output
+  aval at ≥ ``donation_threshold`` bytes (the buffer could be reused in
+  place; flag once per distinct aval signature).
+* ``JX005`` — gather/scatter census inside loop bodies vs. a declared
+  budget: every keyed segment reduction in this codebase lowers to a
+  known number of scatters, so a count above budget means a reduction
+  slipped in as a raw scatter (or a new gather joined the hot loop).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .findings import Finding
+
+__all__ = ["LintThresholds", "LoopCensus", "lint_jaxpr", "is_widening"]
+
+#: Primitives that open a (device-side) loop scope.  ``fori_loop`` and
+#: ``jax.lax.map`` lower to these; there is no separate primitive.
+LOOP_PRIMS = ("while", "scan")
+
+#: Host-callback primitive name fragments (jax renames across versions;
+#: match on substring to stay robust).
+CALLBACK_FRAGMENTS = ("callback", "debug_print", "outfeed", "infeed")
+
+
+@dataclass(frozen=True)
+class LintThresholds:
+    const_threshold: int = 64 * 1024        # JX003: bytes of baked trace const
+    donation_threshold: int = 256 * 1024    # JX004: bytes of matching aval
+    scatter_budget: Optional[int] = None    # JX005: None = census only
+    gather_budget: Optional[int] = None
+
+
+@dataclass
+class LoopCensus:
+    """Measured gather/scatter op counts inside loop bodies."""
+
+    scatter: int = 0
+    gather: int = 0
+    by_prim: Dict[str, int] = field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(sorted(self.by_prim.items()))
+
+
+def _sub_jaxprs(eqn) -> Iterator[object]:
+    """Yield every inner jaxpr carried by an eqn's params (covers
+    while/scan/pjit/custom_*/pallas sub-jaxprs uniformly)."""
+    for param in eqn.params.values():
+        vals = param if isinstance(param, (tuple, list)) else (param,)
+        for v in vals:
+            if hasattr(v, "eqns"):
+                yield v
+            elif hasattr(getattr(v, "jaxpr", None), "eqns"):
+                yield v.jaxpr
+
+
+def iter_eqns(jaxpr, in_loop: bool = False) -> Iterator[Tuple[object, bool]]:
+    """Depth-first (eqn, inside_loop_body) over a jaxpr and all sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn, in_loop
+        child_in_loop = in_loop or eqn.primitive.name in LOOP_PRIMS
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, child_in_loop)
+
+
+def is_widening(src: np.dtype, dst: np.dtype) -> bool:
+    """True when src→dst is a same-kind widening (the promotion class
+    JX001 flags: f32→f64, i32→i64, u8→u32, ...).  Kind changes (bool→f32
+    casts, int→float intensity loads) are deliberate casts, not lattice
+    promotions, and are not flagged."""
+    src, dst = np.dtype(src), np.dtype(dst)
+    return src.kind == dst.kind and dst.itemsize > src.itemsize
+
+
+def _aval_nbytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def lint_jaxpr(
+    closed,
+    site: str,
+    *,
+    thresholds: LintThresholds = LintThresholds(),
+    donated: Set[int] = frozenset(),
+) -> Tuple[List[Finding], LoopCensus]:
+    """Run every JX detector over a ClosedJaxpr.
+
+    ``site`` labels findings (e.g. ``run_em[static/xla/K=2]``);
+    ``donated`` is the set of flattened input positions the caller
+    donates (the session layer donates nothing; the engine's pool writes
+    donate arg 0).  Returns the findings plus the loop gather/scatter
+    census (reported in ANALYSIS.json even when under budget).
+    """
+    findings: List[Finding] = []
+    census = LoopCensus()
+    t = thresholds
+
+    # JX003 — trace-embedded closure constants.
+    for i, const in enumerate(closed.consts):
+        if not hasattr(const, "shape"):
+            continue
+        arr = np.asarray(const)
+        if arr.nbytes >= t.const_threshold:
+            findings.append(
+                Finding(
+                    "JX003", "warning", f"{site}/const[{i}]",
+                    f"closure constant {arr.shape} {arr.dtype} "
+                    f"({arr.nbytes} bytes) baked into the trace; pass it "
+                    "as an argument so the executable cache can share it",
+                )
+            )
+
+    # Walk every eqn once for JX001/JX002/JX005.
+    seen_wide: Set[str] = set()
+    for eqn, in_loop in iter_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+
+        if name == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = np.dtype(eqn.params["new_dtype"])
+            if hasattr(src, "dtype") and is_widening(src.dtype, dst):
+                findings.append(
+                    Finding(
+                        "JX001", "error", f"{site}/convert",
+                        f"implicit {np.dtype(src.dtype).name}->{dst.name} "
+                        f"promotion (operand shape {tuple(src.shape)}"
+                        f"{', weak' if getattr(src, 'weak_type', False) else ''})",
+                    )
+                )
+
+        for v in tuple(eqn.invars) + tuple(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is None:
+                continue
+            nd = np.dtype(dtype)
+            if nd.kind in "fiuc" and nd.itemsize > 4 and nd.name not in seen_wide:
+                seen_wide.add(nd.name)
+                findings.append(
+                    Finding(
+                        "JX001", "error", f"{site}/x64:{nd.name}",
+                        f"{nd.name} value on a traced path (x64 leak; the "
+                        "bit-identity contract pins 32-bit arithmetic)",
+                    )
+                )
+
+        if in_loop and any(frag in name for frag in CALLBACK_FRAGMENTS):
+            findings.append(
+                Finding(
+                    "JX002", "error", f"{site}/loop:{name}",
+                    f"host callback primitive {name!r} inside a device "
+                    "loop body (per-iteration host round-trip)",
+                )
+            )
+
+        if in_loop and name.startswith("scatter"):
+            census.scatter += 1
+            census.by_prim[name] = census.by_prim.get(name, 0) + 1
+        if in_loop and name == "gather":
+            census.gather += 1
+            census.by_prim[name] = census.by_prim.get(name, 0) + 1
+
+    # JX004 — donation candidates: input avals that exactly match an
+    # output aval, large enough to matter, and not donated.
+    out_sigs = set()
+    for var in closed.jaxpr.outvars:
+        aval = getattr(var, "aval", None)
+        shape = getattr(aval, "shape", None)
+        dtype = getattr(aval, "dtype", None)
+        if shape is not None:
+            out_sigs.add((tuple(shape), np.dtype(dtype).name))
+    flagged_sigs = set()
+    for pos, var in enumerate(closed.jaxpr.invars):
+        if pos in donated:
+            continue
+        aval = var.aval
+        shape = getattr(aval, "shape", None)
+        dtype = getattr(aval, "dtype", None)
+        if shape is None:
+            continue
+        sig = (tuple(shape), np.dtype(dtype).name)
+        if sig in out_sigs and sig not in flagged_sigs:
+            if _aval_nbytes(aval) >= t.donation_threshold:
+                flagged_sigs.add(sig)
+                findings.append(
+                    Finding(
+                        "JX004", "warning",
+                        f"{site}/in[{pos}]",
+                        f"non-donated input {sig[1]}{list(sig[0])} "
+                        f"({_aval_nbytes(aval)} bytes) matches an output "
+                        "aval; donating it would let XLA reuse the buffer",
+                    )
+                )
+
+    # JX005 — loop gather/scatter census vs. declared budget.
+    if t.scatter_budget is not None and census.scatter > t.scatter_budget:
+        findings.append(
+            Finding(
+                "JX005", "error", f"{site}/loop-scatter",
+                f"{census.scatter} scatter op(s) in loop bodies exceeds the "
+                f"declared budget of {t.scatter_budget}; a keyed segment "
+                "reduction candidate is lowering as a raw scatter",
+            )
+        )
+    if t.gather_budget is not None and census.gather > t.gather_budget:
+        findings.append(
+            Finding(
+                "JX005", "error", f"{site}/loop-gather",
+                f"{census.gather} gather op(s) in loop bodies exceeds the "
+                f"declared budget of {t.gather_budget}",
+            )
+        )
+
+    return findings, census

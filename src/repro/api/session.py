@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.analysis import budget as budget_mod
 from repro.api.config import ExecutionConfig
 from repro.api.errors import FallbackError, PlanError
 from repro.core.pmrf import distributed as distributed_mod
@@ -349,9 +350,11 @@ class Segmenter:
         if exe is not None:
             self._cache.move_to_end(key)
             self.stats.hits += 1
+            budget_mod.LEDGER.bump("compile", "warm_hit")
             return exe
 
         self.stats.misses += 1
+        budget_mod.LEDGER.bump("compile", "lower_compile")
         t0 = time.perf_counter()
         compiled, em_config, used_key = self._build_with_policy(key, build)
         exe = Executable(

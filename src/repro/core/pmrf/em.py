@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import budget as budget_mod
 from repro.core import dpp
 from repro.core.pmrf import collectives
 from repro.core.pmrf import energy as E
@@ -82,15 +83,19 @@ OK_STATUSES = frozenset({STATUS_CONVERGED, STATUS_MAX_ITERS})
 # and that the session API's executable cache (repro.api, DESIGN.md §10)
 # performs zero traces on a warm hit.  ``run_em_sharded`` counts traces of
 # the shard_map'd driver (``distributed.py``).
-TRACE_COUNTS = {
-    "run_em": 0, "run_em_batched": 0, "run_em_sharded": 0, "run_em_ticked": 0,
-}
+#
+# The dict IS the analysis ledger's "trace" section (same object, see
+# repro.analysis.budget / DESIGN.md §15): incrementing it here is what
+# the compile-budget sentinel measures, so the counters tests assert on
+# and the budgets the auditor gates on can never drift apart.
+TRACE_COUNTS = budget_mod.LEDGER.section(
+    "trace", keys=("run_em", "run_em_batched", "run_em_sharded", "run_em_ticked")
+)
 
 
 def reset_trace_counts() -> None:
-    """Zero all trace counters (test hook)."""
-    for k in TRACE_COUNTS:
-        TRACE_COUNTS[k] = 0
+    """Zero all trace counters (test hook; resets the ledger section)."""
+    budget_mod.LEDGER.reset("trace")
 
 
 class EMConfig(NamedTuple):

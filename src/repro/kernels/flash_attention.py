@@ -135,5 +135,17 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
+        # The output tile is revisited along the key-block axis ik (the
+        # online-softmax accumulation), so ik must be sequential
+        # ("arbitrary"); batch/head/query-block axes write disjoint
+        # tiles and are parallel.  Declared for the analysis race
+        # checker (PL101/PL104, DESIGN.md §15).
+        compiler_params=dict(
+            mosaic=dict(
+                dimension_semantics=(
+                    "parallel", "parallel", "parallel", "arbitrary"
+                )
+            )
+        ),
         interpret=interpret,
     )(q, k, v)

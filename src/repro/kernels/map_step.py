@@ -212,6 +212,15 @@ def fused_map_step_pallas(
             jax.ShapeDtypeStruct((s_pad,), jnp.float32),
             jax.ShapeDtypeStruct((n_labels, r_pad), jnp.float32),
         ],
+        # Every output block is revisited across the grid: min/arg carry
+        # the running minimum along the label axis, and hood_e/votes
+        # accumulate over BOTH axes.  Declare the whole grid sequential
+        # ("arbitrary") instead of relying on Mosaic's implicit default —
+        # the analysis race checker (PL104, DESIGN.md §15) requires the
+        # revisit-safety assumption to be stated, not inherited.
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary", "arbitrary"))
+        ),
         interpret=interpret,
     )(
         jnp.asarray(beta, jnp.float32).reshape(1),

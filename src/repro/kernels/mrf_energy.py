@@ -103,6 +103,10 @@ def mrf_min_energy_pallas(
             jax.ShapeDtypeStruct((n_pad,), jnp.float32),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         ],
+        # One element block per grid step, no output revisited — the
+        # grid is safe to parallelize, and saying so lets Mosaic do it
+        # (declared for the analysis race checker, DESIGN.md §15).
+        compiler_params=dict(mosaic=dict(dimension_semantics=("parallel",))),
         interpret=interpret,
     )(params, pad(y), pad(w), pad(n1_e), pad(nall_e), pad(xf))
 

@@ -102,6 +102,15 @@ def segment_reduce_pallas(
         ],
         out_specs=pl.BlockSpec((BLOCK_SEG,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((s_pad,), values.dtype),
+        # The output block is revisited along the value axis j (the
+        # accumulation axis), which must therefore run sequentially
+        # ("arbitrary"); the segment-block axis i writes disjoint output
+        # blocks and is declared parallel.  Stated explicitly for the
+        # analysis race checker (PL101/PL104, DESIGN.md §15) instead of
+        # leaning on Mosaic's implicit sequential default.
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ),
         interpret=interpret,
     )(segs, vals)
 

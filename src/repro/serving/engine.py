@@ -53,6 +53,7 @@ from typing import Dict, List, Optional, Union
 import jax
 import numpy as np
 
+from repro.analysis import budget as budget_mod
 from repro.api.config import ExecutionConfig
 from repro.api.errors import FallbackError, RequestError
 from repro.api.session import BucketKey, Plan, Segmenter
@@ -512,6 +513,10 @@ class SegmentationEngine:
         self.watchdog.observe(self.ticks, time.perf_counter() - t0)
         self.ticks += 1
         self.lane_steps += n_active * self.tick_iters
+        # Mirror into the analysis ledger (DESIGN.md §15) so the budget
+        # sentinel sees serving activity alongside trace/compile events.
+        budget_mod.LEDGER.bump("serve", "ticks")
+        budget_mod.LEDGER.bump("serve", "lane_steps", n_active * self.tick_iters)
         # Chaos never-converge holds: reset held lanes' progress before
         # retirement so they can only leave via eviction.  Slot-local
         # writes — co-resident lanes stay bitwise untouched.

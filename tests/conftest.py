@@ -34,8 +34,12 @@ def regenerate_golden(request):
 @pytest.fixture(autouse=True)
 def _reset_global_session_state():
     from repro import api
-    from repro.core.pmrf import em as em_mod
+    from repro import analysis
 
     api.reset_sessions()
-    em_mod.reset_trace_counts()
+    # One reset for every counter store: em.TRACE_COUNTS, the session
+    # compile counters, and the serving tick counters are all sections
+    # of the analysis ledger (DESIGN.md §15), so zeroing the ledger is
+    # the whole job — there is no second store to drift.
+    analysis.reset_all()
     yield

@@ -1,0 +1,312 @@
+"""Static-analysis pass tests (DESIGN.md §15).
+
+Covers: the known-bad Pallas corpus (each detector class fires exactly
+once on its fixture), the registered-kernel regression pin (every
+revisited output axis carries an explicit sequential declaration — the
+auditor's first real finding, fixed in the kernels), the JX jaxpr
+detectors on minimal positive/negative programs, the dtype-promotion
+lattice properties (hypothesis + pinned fallbacks), and the budget
+ledger/sentinel plumbing shared with ``em.TRACE_COUNTS`` and the
+session compile counters.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+import analysis_fixtures as fixtures
+from repro.analysis import budget
+from repro.analysis.findings import Finding, Suppression, apply_suppressions
+from repro.analysis.jaxpr_lint import LintThresholds, is_widening, lint_jaxpr
+from repro.analysis.pallas_check import check_jaxpr_kernels
+
+f32 = jnp.float32
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# known-bad Pallas corpus: one fixture per detector class, firing once
+# ---------------------------------------------------------------------------
+
+CORPUS = [
+    (fixtures.racy_jaxpr, "PL101"),
+    (fixtures.oob_jaxpr, "PL102"),
+    (fixtures.nondivisible_jaxpr, "PL103"),
+    (fixtures.undeclared_jaxpr, "PL104"),
+]
+
+
+@pytest.mark.parametrize(
+    "build,code", CORPUS, ids=[c for _, c in CORPUS]
+)
+def test_corpus_fixture_caught_exactly_once(build, code):
+    reports = check_jaxpr_kernels(build(), "toy")
+    assert len(reports) == 1, "each fixture is a single pallas_call"
+    found = _codes(reports[0].findings)
+    assert found == [code], (
+        f"fixture for {code} must fire that detector exactly once and "
+        f"nothing else; got {found}"
+    )
+
+
+def test_racy_fixture_reports_revisited_axis():
+    (report,) = check_jaxpr_kernels(fixtures.racy_jaxpr(), "toy")
+    assert list(report.revisited_axes.values()) == [[0]]
+    assert report.dimension_semantics == ("parallel", "parallel")
+
+
+# ---------------------------------------------------------------------------
+# registered kernels: the satellite-1 regression pin
+# ---------------------------------------------------------------------------
+
+def test_registered_kernels_have_no_findings():
+    """The auditor's first real finding (PL104 on every revisited output
+    of all four kernels: revisit-safety inherited from Mosaic's implicit
+    sequential default instead of declared) is fixed by the explicit
+    ``dimension_semantics`` declarations — pin that it stays fixed."""
+    from repro.analysis.cli import _kernel_jaxprs
+
+    seen = set()
+    for site, closed in _kernel_jaxprs():
+        for rep in check_jaxpr_kernels(closed, site):
+            seen.add(site)
+            assert rep.findings == [], (site, _codes(rep.findings))
+            # The pin itself: semantics declared, and every revisited
+            # output axis is explicitly sequential.
+            assert rep.dimension_semantics is not None, site
+            for axes in rep.revisited_axes.values():
+                for d in axes:
+                    assert rep.dimension_semantics[d] == "arbitrary", (
+                        site, d, rep.dimension_semantics
+                    )
+    assert {"segment_reduce[add]", "mrf_min_energy", "flash_attention"} <= seen
+
+
+def test_accumulating_kernels_declare_sequential_revisit():
+    """segment_reduce accumulates along the value axis and flash
+    attention along the key axis — both must be revisited AND pinned
+    'arbitrary' (the race that bit the K-grid rewrite)."""
+    from repro.analysis.cli import _kernel_jaxprs
+
+    by_site = {}
+    for site, closed in _kernel_jaxprs():
+        for rep in check_jaxpr_kernels(closed, site):
+            by_site[site] = rep
+
+    sr = by_site["segment_reduce[add]"]
+    assert list(sr.revisited_axes.values()) == [[1]]
+    assert sr.dimension_semantics == ("parallel", "arbitrary")
+
+    fa = by_site["flash_attention"]
+    assert list(fa.revisited_axes.values()) == [[3]]
+    assert fa.dimension_semantics[3] == "arbitrary"
+
+
+# ---------------------------------------------------------------------------
+# JX jaxpr detectors on minimal programs
+# ---------------------------------------------------------------------------
+
+def test_jx001_widening_convert_flagged():
+    closed = jax.make_jaxpr(lambda x: x.astype(f32))(
+        jax.ShapeDtypeStruct((8,), jnp.float16)
+    )
+    fs, _ = lint_jaxpr(closed, "t")
+    assert "JX001" in _codes(fs)
+
+
+def test_jx001_casts_not_flagged():
+    def fn(b, i):
+        return b.astype(f32) + i.astype(f32)  # kind changes: casts, not promotions
+
+    closed = jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct((8,), jnp.bool_),
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+    )
+    fs, _ = lint_jaxpr(closed, "t")
+    assert fs == []
+
+
+def test_jx002_callback_in_loop_flagged():
+    def body(i, c):
+        jax.debug.print("i={i}", i=i)
+        return c + 1.0
+
+    closed = jax.make_jaxpr(
+        lambda x: jax.lax.fori_loop(0, 4, body, x)
+    )(jax.ShapeDtypeStruct((), f32))
+    fs, _ = lint_jaxpr(closed, "t")
+    assert "JX002" in _codes(fs)
+
+
+def test_jx003_closure_const_flagged():
+    baked = jnp.arange(65536, dtype=f32)  # 256 KB baked into the trace
+    closed = jax.make_jaxpr(lambda x: x + baked)(
+        jax.ShapeDtypeStruct((65536,), f32)
+    )
+    # donate the input so the (legitimate) JX004 on x+baked -> out
+    # doesn't fire and the const finding is isolated
+    fs, _ = lint_jaxpr(closed, "t", donated={0})
+    assert _codes(fs) == ["JX003"]
+
+
+def test_jx004_donation_candidate_flagged_unless_donated():
+    closed = jax.make_jaxpr(lambda x: x * 2.0)(
+        jax.ShapeDtypeStruct((65536,), f32)  # 256 KB, matches the output
+    )
+    fs, _ = lint_jaxpr(closed, "t")
+    assert _codes(fs) == ["JX004"]
+    fs, _ = lint_jaxpr(closed, "t", donated={0})
+    assert fs == []
+
+
+def test_jx005_loop_scatter_budget():
+    def body(i, c):
+        return c.at[i].set(0.0)
+
+    closed = jax.make_jaxpr(
+        lambda x: jax.lax.fori_loop(0, 4, body, x)
+    )(jax.ShapeDtypeStruct((64,), f32))
+    fs, census = lint_jaxpr(
+        closed, "t", thresholds=LintThresholds(scatter_budget=0)
+    )
+    assert census.scatter == 1
+    assert _codes(fs) == ["JX005"]
+    fs, _ = lint_jaxpr(
+        closed, "t", thresholds=LintThresholds(scatter_budget=1)
+    )
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-promotion lattice: hypothesis round-trips + pinned fallbacks
+# ---------------------------------------------------------------------------
+
+_DTYPES = [
+    np.dtype(n)
+    for n in (
+        "bool", "uint8", "uint16", "uint32", "int8", "int16", "int32",
+        "float16", "float32", "float64", "complex64",
+    )
+]
+
+
+@given(st.sampled_from(_DTYPES), st.sampled_from(_DTYPES))
+@settings(max_examples=200, deadline=None)
+def test_widening_is_a_strict_partial_order(a, b):
+    assert not is_widening(a, a)
+    assert not (is_widening(a, b) and is_widening(b, a))
+
+
+@given(
+    st.sampled_from(_DTYPES), st.sampled_from(_DTYPES), st.sampled_from(_DTYPES)
+)
+@settings(max_examples=200, deadline=None)
+def test_widening_transitive(a, b, c):
+    if is_widening(a, b) and is_widening(b, c):
+        assert is_widening(a, c)
+
+
+@given(st.sampled_from(_DTYPES), st.sampled_from(_DTYPES))
+@settings(max_examples=200, deadline=None)
+def test_widening_matches_promotion_lattice_roundtrip(a, b):
+    """Converting up to np.promote_types(a, b) is flagged iff it widens
+    within a's kind — and the way back down is never a widening."""
+    p = np.promote_types(a, b)
+    if is_widening(a, p):
+        assert p.kind == a.kind and p.itemsize > a.itemsize
+        assert not is_widening(p, a)
+
+
+def test_widening_pinned_examples():
+    assert is_widening("float32", "float64")
+    assert is_widening("int32", "int64")
+    assert is_widening("float16", "float32")
+    assert not is_widening("float64", "float32")   # narrowing
+    assert not is_widening("bool", "float32")      # kind change: cast
+    assert not is_widening("int32", "float32")     # kind change: cast
+    assert not is_widening("float32", "float32")   # identity
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_matches_and_staleness():
+    f1 = Finding("JX004", "warning", "run_em_ticked[static/xla/K=2]/in[18]", "m")
+    f2 = Finding("JX004", "warning", "run_em[static/xla/K=2]/in[3]", "m")
+    sup = Suppression("JX004", "run_em_ticked*", "deliberate")
+    out, stale = apply_suppressions([f1, f2], [sup])
+    assert out[0].suppressed and not out[1].suppressed
+    assert stale == []
+    _, stale = apply_suppressions([f2], [sup])
+    assert stale == [sup]
+
+
+# ---------------------------------------------------------------------------
+# budget ledger: the one counter store (satellite: dedup of the three hooks)
+# ---------------------------------------------------------------------------
+
+def test_trace_counts_is_the_ledger_section():
+    from repro.core.pmrf import em as em_mod
+
+    assert em_mod.TRACE_COUNTS is budget.LEDGER.section("trace")
+    em_mod.TRACE_COUNTS["run_em"] += 1
+    assert budget.LEDGER.total("trace") == 1
+    em_mod.reset_trace_counts()
+    assert em_mod.TRACE_COUNTS["run_em"] == 0
+    assert budget.LEDGER.total("trace") == 0
+    # reset preserves identity: module-level aliases survive resets
+    assert em_mod.TRACE_COUNTS is budget.LEDGER.section("trace")
+
+
+def test_expect_raises_on_overshoot():
+    with pytest.raises(budget.BudgetExceeded):
+        with budget.expect("warm_execute"):  # budget: 0 traces
+            budget.LEDGER.bump("trace", "run_em")
+
+
+def test_expect_passes_within_budget():
+    with budget.expect("cold_compile"):  # budget: 1 trace
+        budget.LEDGER.bump("trace", "run_em")
+
+
+def test_session_compile_events_route_through_ledger():
+    from repro.api import Segmenter
+    from repro.api.config import ExecutionConfig
+
+    seg = Segmenter(
+        ExecutionConfig(mode="static", backend="xla",
+                        max_em_iters=2, max_map_iters=2)
+    )
+    bucket = (256, 32, 32)
+    seg.compile(bucket)
+    sec = budget.LEDGER.section("compile")
+    assert sec["lower_compile"] == 1
+    with budget.expect("warm_execute"):  # warm hit: zero traces
+        seg.compile(bucket)
+    assert sec["warm_hit"] == 1
+    assert seg.stats.misses == 1 and seg.stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# the checked-in baseline stays clean
+# ---------------------------------------------------------------------------
+
+def test_analysis_baseline_is_clean():
+    path = pathlib.Path(__file__).resolve().parents[1] / "ANALYSIS.json"
+    report = json.loads(path.read_text())
+    assert report["summary"]["unsuppressed"] == 0
+    assert report["unsuppressed_findings"] == []
+    assert report["stale_suppressions"] == []
+    # every declared budget was measured by the sentinel smoke
+    declared = {b["phase"] for b in report["budgets"]["declared"]}
+    assert declared == set(report["budgets"]["measured"])
