@@ -7,8 +7,11 @@ across PRs.  Also reports the batched-vs-loop slice-stack timing through
 the session API (``Segmenter.segment_stack``, DESIGN.md §9/§10) — the
 forced-batch path AND the ``batch="auto"`` policy path, which ``--check``
 gates (auto must never lose to the loop: the lockstep-batched inversion on
-CPU is a known regression that auto is required to route around) — and a
-K-sweep (K in {2, 3, 5, 8}) of the K-ary static mode (DESIGN.md §13).
+CPU is a known regression that auto is required to route around, and the
+root-cause fields under ``segment_volume`` quantify it) — and a K-sweep
+(K in {2, 3, 5, 8}) of the K-ary static AND fused static-pallas modes
+(DESIGN.md §13/§16), with a ``--check`` gate holding the fused route's
+per-EM-iteration cost flat in K (K=5 within 2.5x of K=2).
 """
 
 from __future__ import annotations
@@ -72,15 +75,47 @@ def run() -> dict:
 
     imgs = [np.asarray(im) for im in vol.images]
     sess = api.Segmenter(api.ExecutionConfig(overseg_grid=(16, 16)))
-    _, loop_s = sess.segment_stack(imgs, batch="never")
-    _, batch_s = sess.segment_stack(imgs, batch="always")
+    res_loop, loop_s = sess.segment_stack(imgs, batch="never")
+    res_batch, batch_s = sess.segment_stack(imgs, batch="always")
     _, auto_s = sess.segment_stack(imgs, batch="auto")
 
-    # K-sweep: the K-ary static mode on a K-phase volume of the same shape
-    # (DESIGN.md §13).  Tracks how the widened key spaces scale the MAP hot
-    # loop — counts/votes key spaces and the vote argmax grow by K, the
-    # energy map by K lanes.
-    k_sweep = {}
+    # Root-cause instrumentation for the forced-batch inversion (batched
+    # slower than the serial loop on CPU).  A vmapped lockstep while_loop
+    # runs every lane until the SLOWEST slice converges — the inflation
+    # factor below is exactly that padding work (B * max(iters) vs
+    # sum(iters)); XLA:CPU then serializes the vmapped lanes, so the
+    # inflation is paid in wall clock instead of being hidden by width.
+    loop_iters = [int(r.em_iters) for r in res_loop]
+    batch_iters = [int(r.em_iters) for r in res_batch]
+    lockstep_inflation = (
+        len(loop_iters) * max(loop_iters) / max(sum(loop_iters), 1)
+    )
+    segment_volume = {
+        "slices": len(imgs),
+        "loop_mean_optimize_seconds": round(loop_s, 5),
+        "batched_mean_optimize_seconds": round(batch_s, 5),
+        "auto_mean_optimize_seconds": round(auto_s, 5),
+        "per_slice_em_iters": loop_iters,
+        "batched_em_iters": batch_iters,
+        "lockstep_inflation": round(lockstep_inflation, 4),
+        "batched_over_loop": round(batch_s / max(loop_s, 1e-9), 4),
+        "note": (
+            "forced batch='always' loses to the serial loop on CPU by "
+            "design, not by defect: the vmapped lockstep while_loop runs "
+            "every lane to the slowest slice's convergence "
+            "(lockstep_inflation x the serial EM work) and XLA:CPU "
+            "executes the vmapped lanes serially, so the padding work is "
+            "pure wall-clock overhead; batch='auto' routes around it "
+            "(gated below).  On accelerators the lanes run in parallel "
+            "and the same inflation is hidden by hardware width."
+        ),
+    }
+
+    # K-sweep: the K-ary modes on a K-phase volume of the same shape
+    # (DESIGN.md §13/§16).  Tracks how the widened key spaces scale the
+    # MAP hot loop — and whether the label-blocked fused tick keeps the
+    # static-pallas per-EM-iteration cost flat in K (the --check gate).
+    k_sweep = {"static": {}, "static-pallas": {}}
     for k in K_SWEEP:
         kvol = synthetic.make_kary_volume(
             seed=0, n_slices=1, shape=shape, n_phases=k
@@ -92,24 +127,27 @@ def run() -> dict:
         kl0, km0, ks0 = em_mod.quantile_init(
             kprob.graph.region_mean, kprob.graph.n_regions, k
         )
-        kcfg = em_mod.EMConfig(
-            max_em_iters=CONFIG.max_em_iters, max_map_iters=CONFIG.max_map_iters,
-            mode="static", beta=CONFIG.beta, backend=CONFIG.backend,
-        )
-        t = time_fn(
-            lambda kcfg=kcfg, kprob=kprob, kl0=kl0, km0=km0, ks0=ks0: em_mod.run_em(
-                kprob.hoods, kprob.model, kl0, km0, ks0, kcfg
-            ),
-            repeats=3,
-        )
-        res = em_mod.run_em(kprob.hoods, kprob.model, kl0, km0, ks0, kcfg)
-        k_sweep[str(k)] = {
-            "optimize_seconds": round(t, 5),
-            "em_iters": int(res.em_iters),
-            "labels_in_use": int(
-                len(np.unique(np.asarray(res.labels)[: kprob.graph.n_regions]))
-            ),
-        }
+        for mode in k_sweep:
+            kcfg = em_mod.EMConfig(
+                max_em_iters=CONFIG.max_em_iters,
+                max_map_iters=CONFIG.max_map_iters,
+                mode=mode, beta=CONFIG.beta, backend=CONFIG.backend,
+            )
+            t = time_fn(
+                lambda kcfg=kcfg, kprob=kprob, kl0=kl0, km0=km0, ks0=ks0:
+                    em_mod.run_em(kprob.hoods, kprob.model, kl0, km0, ks0, kcfg),
+                repeats=3,
+            )
+            res = em_mod.run_em(kprob.hoods, kprob.model, kl0, km0, ks0, kcfg)
+            em_iters = int(res.em_iters)
+            k_sweep[mode][str(k)] = {
+                "optimize_seconds": round(t, 5),
+                "em_iters": em_iters,
+                "per_em_iter_seconds": round(t / max(em_iters, 1), 6),
+                "labels_in_use": int(
+                    len(np.unique(np.asarray(res.labels)[: kprob.graph.n_regions]))
+                ),
+            }
 
     return {
         "config": CONFIG.name,
@@ -119,12 +157,7 @@ def run() -> dict:
         "backend": kops.resolve_backend(CONFIG.backend),
         "jax_backend": jax.default_backend(),
         "modes": modes,
-        "segment_volume": {
-            "slices": len(imgs),
-            "loop_mean_optimize_seconds": round(loop_s, 5),
-            "batched_mean_optimize_seconds": round(batch_s, 5),
-            "auto_mean_optimize_seconds": round(auto_s, 5),
-        },
+        "segment_volume": segment_volume,
         "k_sweep": k_sweep,
     }
 
@@ -151,10 +184,11 @@ def main() -> None:
     )
     ks = result["k_sweep"]
     print_csv(
-        "K-sweep: K-ary static-mode optimize seconds (DESIGN.md §13)",
-        ["K", "optimize_s", "em_iters", "labels_in_use"],
-        [(k, d["optimize_seconds"], d["em_iters"], d["labels_in_use"])
-         for k, d in ks.items()],
+        "K-sweep: K-ary per-mode optimize seconds (DESIGN.md §13/§16)",
+        ["mode", "K", "optimize_s", "per_em_iter_s", "em_iters", "labels_in_use"],
+        [(mode, k, d["optimize_seconds"], d["per_em_iter_seconds"],
+          d["em_iters"], d["labels_in_use"])
+         for mode, sweep in ks.items() for k, d in sweep.items()],
     )
     # Exact cross-mode label equality is only claimed on the XLA/CPU path
     # (energy.py); on TPU the one-hot dot accumulation order can perturb
@@ -177,9 +211,20 @@ def main() -> None:
             f"segment_stack(batch='auto') regressed: auto {auto_s}s vs loop "
             f"{loop_s}s — the auto policy must never lose to the serial loop"
         )
-        assert all(d["labels_in_use"] == int(k) for k, d in ks.items()), (
-            "K-sweep: some label never captured a region — K-ary EM "
-            "degenerated"
+        assert all(
+            d["labels_in_use"] == int(k)
+            for sweep in ks.values() for k, d in sweep.items()
+        ), "K-sweep: some label never captured a region — K-ary EM degenerated"
+        # The fused-tick K-flatness gate (DESIGN.md §16): label-blocked
+        # tiles + compound-key reductions make the per-EM-iteration cost of
+        # the fused static-pallas route scale sub-linearly in K — K=5 must
+        # stay within 2.5x of K=2 per iteration (a label-replicated layout
+        # would pay ~2.5x in kernel work alone, plus per-K launch overhead).
+        sp = ks["static-pallas"]
+        k_ratio = sp["5"]["per_em_iter_seconds"] / sp["2"]["per_em_iter_seconds"]
+        assert k_ratio <= 2.5, (
+            f"fused-tick K-sweep regressed: static-pallas per-EM-iter "
+            f"K=5/K=2 ratio {k_ratio:.2f} > 2.5"
         )
 
 

@@ -27,6 +27,17 @@ import sys
 OUT_PATH = pathlib.Path("BENCH_sharded.json")
 MODES = ("static", "static-pallas")
 SHARDS = (1, 8)
+#: Square image edge lengths for the size sweep.  The base size keeps the
+#: historical BENCH_sharded numbers comparable; the larger sizes track how
+#: partitioning overhead amortizes as the per-shard work grows.  The
+#: oversegmentation grid scales with the image (one cell per 8x8 tile) so
+#: every size runs at the same region granularity.
+BASE_SIZE = 96
+SIZES = (96, 192, 288)
+
+
+def _grid(size: int):
+    return (size // 8, size // 8)
 
 
 def _measure() -> dict:
@@ -37,37 +48,61 @@ def _measure() -> dict:
     from repro import api
     from repro.core import synthetic
 
-    vol = synthetic.make_synthetic_volume(seed=0, n_slices=1, shape=(96, 96))
-    img = np.asarray(vol.images[0])
+    def image(size):
+        vol = synthetic.make_synthetic_volume(
+            seed=0, n_slices=1, shape=(size, size)
+        )
+        return np.asarray(vol.images[0])
+
+    def sweep(img, size, modes):
+        """mode x shards timing at one size, with the parity assert."""
+        per_mode = {}
+        for mode in modes:
+            per = {}
+            segmentations = {}
+            for shards in SHARDS:
+                sess = api.Segmenter(
+                    api.ExecutionConfig(
+                        overseg_grid=_grid(size), mode=mode, shards=shards
+                    )
+                )
+                plan = sess.plan(img)
+                exe = sess.compile(plan)  # pay the compile outside the timer
+                res = sess.execute(plan, seed=0)
+                segmentations[shards] = np.asarray(res.segmentation)
+                t = time_fn(lambda: sess.execute(plan, seed=0), repeats=3)
+                per[str(shards)] = {
+                    "optimize_seconds": round(t, 5),
+                    "compile_seconds": round(exe.compile_seconds, 3),
+                    "em_iters": int(res.em_iters),
+                }
+            match = bool(
+                (segmentations[min(SHARDS)] == segmentations[max(SHARDS)]).all()
+            )
+            per["labels_match"] = match
+            assert match, (
+                f"sharded {mode} segmentation diverged from single-device "
+                f"at size {size}"
+            )
+            per_mode[mode] = per
+        return per_mode
+
     out = {
         "jax_backend": jax.default_backend(),
         "device_count": jax.device_count(),
-        "image_shape": list(img.shape),
-        "modes": {},
-    }
-    for mode in MODES:
-        per = {}
-        segmentations = {}
-        for shards in SHARDS:
-            sess = api.Segmenter(
-                api.ExecutionConfig(overseg_grid=(12, 12), mode=mode, shards=shards)
-            )
-            plan = sess.plan(img)
-            exe = sess.compile(plan)  # pay the compile outside the timer
-            res = sess.execute(plan, seed=0)
-            segmentations[shards] = np.asarray(res.segmentation)
-            t = time_fn(lambda: sess.execute(plan, seed=0), repeats=3)
-            per[str(shards)] = {
-                "optimize_seconds": round(t, 5),
-                "compile_seconds": round(exe.compile_seconds, 3),
-                "em_iters": int(res.em_iters),
+        "image_shape": [BASE_SIZE, BASE_SIZE],
+        "modes": sweep(image(BASE_SIZE), BASE_SIZE, MODES),
+        # Size sweep on the fused static-pallas route only: it is the
+        # serving-path mode, and the static row at BASE_SIZE above already
+        # anchors the cross-mode comparison.
+        "sizes": {
+            str(size): {
+                "overseg_grid": list(_grid(size)),
+                **sweep(image(size), size, ("static-pallas",))["static-pallas"],
             }
-        match = bool(
-            (segmentations[min(SHARDS)] == segmentations[max(SHARDS)]).all()
-        )
-        per["labels_match"] = match
-        assert match, f"sharded {mode} segmentation diverged from single-device"
-        out["modes"][mode] = per
+            for size in SIZES
+        },
+    }
     return out
 
 
@@ -106,6 +141,17 @@ def main() -> None:
         f"({result['jax_backend']}, {result['device_count']} devices) -> {OUT_PATH}",
         ["mode", "shards", "optimize_s", "compile_s", "labels_match"],
         rows,
+    )
+    size_rows = []
+    for size, per in result["sizes"].items():
+        for shards in map(str, SHARDS):
+            d = per[shards]
+            size_rows.append((size, shards, d["optimize_seconds"],
+                              d["em_iters"], per["labels_match"]))
+    print_csv(
+        "sharded EM size sweep (static-pallas)",
+        ["size", "shards", "optimize_s", "em_iters", "labels_match"],
+        size_rows,
     )
 
 

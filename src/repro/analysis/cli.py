@@ -99,7 +99,9 @@ def _kernel_jaxprs():
     import functools
     import jax
     import jax.numpy as jnp
+    from repro.core.pmrf import em as em_mod
     from repro.kernels import (
+        em_tick as et,
         flash_attention as fa,
         map_step as ms,
         mrf_energy as me,
@@ -134,6 +136,22 @@ def _kernel_jaxprs():
             (
                 f"fused_map_step[K={k}]",
                 jax.make_jaxpr(fn)(e, e, cnt, e, e, v, i, i, muk, muk),
+            )
+        )
+
+    hist = jax.ShapeDtypeStruct((em_mod.WINDOW + 1, S), f32)
+    r = jax.ShapeDtypeStruct((R,), f32)
+    for k in registry.KS:
+        muk = jax.ShapeDtypeStruct((k,), f32)
+        fn = functools.partial(
+            et.fused_em_tick_pallas,
+            beta=0.75, n_hoods=S, n_vertices=R, precision="f32",
+            conv_tol=1e-4, interpret=True,
+        )
+        out.append(
+            (
+                f"fused_em_tick[K={k}]",
+                jax.make_jaxpr(fn)(e, e, e, e, e, i, i, r, r, hist, muk, muk),
             )
         )
 

@@ -68,7 +68,8 @@ DRIVERS: Tuple[DriverSpec, ...] = (
 
 #: Pallas kernels registered in kernels/ops.py that the checker audits.
 KERNEL_NAMES: Tuple[str, ...] = (
-    "segment_reduce", "mrf_min_energy", "fused_map_step", "flash_attention",
+    "segment_reduce", "mrf_min_energy", "fused_map_step", "fused_em_tick",
+    "flash_attention",
 )
 
 # ---------------------------------------------------------------------------
@@ -82,8 +83,12 @@ KERNEL_NAMES: Tuple[str, ...] = (
 #     pool path replaces integer-count scatters with run-boundary
 #     gathers, so its scatter count DROPS and its gather count grows as
 #     6*(K+1) (the unrolled per-label vote-count passes) — 36 at K=5.
-#   - static-pallas: the kernel wrapper's per-label cnt_e pad writes
-#     make the scatter count 8+K — 13 at K=5 (14 ticked).
+#   - static-pallas: the fused EM-tick route (DESIGN.md §16) folds the
+#     per-label count pass into the launch, so the per-label cnt_e pad
+#     writes of the old two-launch composition are gone.  At the audit
+#     bucket the one-hot VMEM guard routes the tick to the xla reference
+#     composition, whose compound-key count reduction is K-independent —
+#     9 scatters flat over K (10 ticked: one extra pool .at[].set).
 # The two backends lower identically at aligned shapes (the interpret
 # flag changes execution, not the traced program), so each mode's row is
 # duplicated per backend.  A combo missing from this table gets budget
@@ -97,9 +102,9 @@ _MODE_BUDGETS: Dict[Tuple[str, str], Dict[str, int]] = {
     ("run_em", "static"): {"scatter": 10, "gather": 6},
     ("run_em_batched", "static"): {"scatter": 10, "gather": 6},
     ("run_em_ticked", "static"): {"scatter": 7, "gather": 36},
-    ("run_em", "static-pallas"): {"scatter": 13, "gather": 2},
-    ("run_em_batched", "static-pallas"): {"scatter": 13, "gather": 2},
-    ("run_em_ticked", "static-pallas"): {"scatter": 14, "gather": 5},
+    ("run_em", "static-pallas"): {"scatter": 9, "gather": 2},
+    ("run_em_batched", "static-pallas"): {"scatter": 9, "gather": 2},
+    ("run_em_ticked", "static-pallas"): {"scatter": 10, "gather": 5},
 }
 
 _LOOP_BUDGETS: Dict[Tuple[str, str, str], Dict[str, int]] = {

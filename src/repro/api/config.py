@@ -89,6 +89,15 @@ class ExecutionConfig:
     backend: str = "auto"   # auto | xla | pallas | pallas-tpu | pallas-interpret
     mode: str = "static"    # faithful | static | static-pallas
 
+    # --- mixed precision (fused EM tick, DESIGN.md §16) ----------------
+    # "f32" keeps every energy bit-identical to the golden oracle; "bf16"
+    # runs the fused-tick energy arithmetic in bfloat16 with f32
+    # accumulators (bounded-drift tolerance tier in the golden harness).
+    # bf16 requires mode="static-pallas" — it is a property of the fused
+    # kernel, not of the unfused compositions.  Part of `ExecutableKey`:
+    # an f32 compile never aliases a bf16 one.
+    precision: str = "f32"  # f32 | bf16
+
     # --- label space (K-ary multi-label segmentation, DESIGN.md §13) ----
     # n_labels sizes every label-indexed array the session plans/compiles
     # (model reseed quantiles, mu/sigma, tick pools) and widens the
@@ -132,6 +141,15 @@ class ExecutionConfig:
     def __post_init__(self):
         if self.mode not in em_mod.MODES:
             raise ValueError(f"unknown mode {self.mode!r}; have {em_mod.MODES}")
+        if self.precision not in em_mod.PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; have {em_mod.PRECISIONS}"
+            )
+        if self.precision == "bf16" and self.mode != "static-pallas":
+            raise ValueError(
+                "precision='bf16' requires mode='static-pallas' (the bf16 "
+                "energy path lives in the fused EM-tick kernel)"
+            )
         if self.init not in ("random", "quantile"):
             raise ValueError(f"init must be 'random' or 'quantile', got {self.init!r}")
         if self.backend not in (None, "auto", "pallas") and self.backend not in kops.BACKENDS:
@@ -173,6 +191,7 @@ class ExecutionConfig:
             beta=self.beta,
             sigma_min=self.sigma_min,
             backend=backend if backend is not None else self.resolved_backend(),
+            precision=self.precision,
         )
 
     def with_(self, **changes) -> "ExecutionConfig":

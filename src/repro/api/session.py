@@ -75,7 +75,9 @@ class ExecutableKey(NamedTuple):
     consumes pool state, not initial parameters, so it never aliases a
     ``run_em`` compile.  ``n_labels`` is the label count K (DESIGN.md §13):
     every label-indexed input shape depends on it, so a K=2 compile must
-    never alias a K>2 one.
+    never alias a K>2 one.  ``precision`` is the fused-tick energy
+    precision (DESIGN.md §16): an f32 trace and a bf16 trace are different
+    programs with identical input shapes, so the key must split them.
     """
 
     capacity: int
@@ -89,6 +91,7 @@ class ExecutableKey(NamedTuple):
     shards: int
     tick_iters: Optional[int] = None
     n_labels: int = 2
+    precision: str = "f32"
 
 
 @dataclass
@@ -314,6 +317,7 @@ class Segmenter:
             shards=c.shards,
             tick_iters=tick_iters,
             n_labels=c.n_labels,
+            precision=c.precision,
         )
 
     def mesh(self) -> Mesh:

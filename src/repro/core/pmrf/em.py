@@ -105,6 +105,24 @@ class EMConfig(NamedTuple):
     beta: float = 0.75
     sigma_min: float = 2.0
     backend: str = "auto"         # kernel dispatch backend (kernels/ops.py)
+    precision: str = "f32"        # fused-tick energy arithmetic: "f32" | "bf16"
+
+
+PRECISIONS = ("f32", "bf16")
+
+
+def _validate_config(config: EMConfig) -> None:
+    if config.mode not in MODES:
+        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    if config.precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {config.precision!r}; have {PRECISIONS}"
+        )
+    if config.precision == "bf16" and config.mode != "static-pallas":
+        raise ValueError(
+            "precision='bf16' is a fused-tick feature: it requires "
+            f"mode='static-pallas', got mode={config.mode!r}"
+        )
 
 
 class EMResult(NamedTuple):
@@ -125,6 +143,8 @@ class _MapCarry(NamedTuple):
     i: Array
     done: Array          # replicated convergence flag (ctx.all_converged)
     diverged: Array      # replicated non-finite-energy flag (folds into done)
+    msums: Array         # (3, K) fused-tick M-step accumulators (sum_w /
+                         # sum_wy / sum_wyy); zeros on the unfused routes
 
 
 class _EmCarry(NamedTuple):
@@ -179,15 +199,33 @@ def _map_step(
     carry: _MapCarry,
     *,
     active: Optional[Array] = None,
+    precision: str = "f32",
 ) -> _MapCarry:
     """One MAP iteration.  ``active`` is the ticked driver's per-lane mask
     (DESIGN.md §12): it rides into every keyed-reduction touch point so a
     masked lane contributes exact zeros, and into the convergence AND so a
     masked lane reports converged.  ``active=None`` (the while_loop
     drivers) and ``active=True`` produce bitwise-identical results — the
-    mask is a select, never an arithmetic rewrite."""
+    mask is a select, never an arithmetic rewrite.
+
+    On the single-device static-pallas route the whole iteration — counts,
+    energies, reductions, M-step accumulators, convergence predicate — is
+    ONE fused launch (``E.em_tick_fused``, DESIGN.md §16) and the carry's
+    ``msums`` holds the kernel's M-step sums for the EM boundary.  The
+    sharded static-pallas route keeps ``E.map_step_fused`` (its collectives
+    interleave with the kernel's stages); everything else is unchanged."""
     n_labels = int(mu.shape[0])
-    if mode == "static-pallas":
+    fused_tick = mode == "static-pallas" and not ctx.sharded
+    conv_raw = None
+    msums = carry.msums
+    if fused_tick:
+        labels, hood_e, conv_raw, sum_w, sum_wy, sum_wyy = E.em_tick_fused(
+            hoods, model, sctx, carry.labels, mu, sigma, carry.hist,
+            backend=backend, active=active, precision=precision,
+            conv_tol=CONV_TOL,
+        )
+        msums = jnp.stack([sum_w, sum_wy, sum_wyy])
+    elif mode == "static-pallas":
         labels, hood_e = E.map_step_fused(
             hoods, model, sctx, carry.labels, mu, sigma, backend=backend, ctx=ctx,
             active=active,
@@ -218,8 +256,16 @@ def _map_step(
     hist = jnp.roll(carry.hist, shift=1, axis=0).at[0].set(hood_e)
     i = carry.i + 1
     # Convergence is decided in the body (not the loop cond) so the
-    # collective AND runs in replicated context on every backend.
-    conv = ctx.all_converged(_window_converged(hist, i), active=active)
+    # collective AND runs in replicated context on every backend.  The
+    # fused tick already reduced the window predicate in-kernel (same
+    # arithmetic as _window_converged on the post-roll ring); only the
+    # iteration-count gate is applied here.
+    if conv_raw is not None:
+        conv = ctx.all_converged(
+            jnp.where(i > WINDOW, conv_raw, False), active=active
+        )
+    else:
+        conv = ctx.all_converged(_window_converged(hist, i), active=active)
     # Divergence folds into ``done`` so a poisoned lane exits the inner
     # loop *immediately* — detection and termination are atomic, which is
     # what lets the ticked drivers skip carrying the flag between steps.
@@ -229,7 +275,7 @@ def _map_step(
     diverged = ~jnp.all(jnp.isfinite(hood_e))
     return _MapCarry(
         labels=labels, hist=hist, hood_energy=hood_e, i=i,
-        done=conv | diverged, diverged=diverged,
+        done=conv | diverged, diverged=diverged, msums=msums,
     )
 
 
@@ -312,6 +358,8 @@ def _em_driver(
         else None
     )
 
+    fused_tick = mode == "static-pallas" and not ctx.sharded
+
     def map_loop(labels, mu, sigma):
         init = _MapCarry(
             labels=labels,
@@ -320,6 +368,7 @@ def _em_driver(
             i=jnp.int32(0),
             done=jnp.bool_(False),
             diverged=jnp.bool_(False),
+            msums=jnp.zeros((3, mu.shape[0]), jnp.float32),
         )
 
         def cond(c: _MapCarry):
@@ -327,13 +376,23 @@ def _em_driver(
 
         return jax.lax.while_loop(
             cond,
-            lambda c: _map_step(hoods, model, mode, backend, sctx, ctx, mu, sigma, c),
+            lambda c: _map_step(
+                hoods, model, mode, backend, sctx, ctx, mu, sigma, c,
+                precision=config.precision,
+            ),
             init,
         )
 
     def em_body(c: _EmCarry) -> _EmCarry:
         mc = map_loop(c.labels, c.mu, c.sigma)
-        mu, sigma, sum_w = E.update_parameters_stats(model, mc.labels, mode)
+        if fused_tick:
+            # The fused launch already accumulated the M-step sums for the
+            # labels it produced; only the closed-form tail runs here.
+            mu, sigma, sum_w = E.params_from_stats(
+                model, mc.msums[0], mc.msums[1], mc.msums[2]
+            )
+        else:
+            mu, sigma, sum_w = E.update_parameters_stats(model, mc.labels, mode)
         # Health classification (DESIGN.md §14) — pure extra compute on
         # values the boundary already produced; never rewrites the healthy
         # arithmetic, so healthy trajectories stay bitwise unchanged.
@@ -401,8 +460,7 @@ def run_em(
     sigma0: Array,
     config: EMConfig = EMConfig(),
 ) -> EMResult:
-    if config.mode not in MODES:
-        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    _validate_config(config)
     TRACE_COUNTS["run_em"] = TRACE_COUNTS.get("run_em", 0) + 1
     return _em_driver(hoods, model, labels0, mu0, sigma0, config, collectives.LOCAL)
 
@@ -563,8 +621,10 @@ def _tick_micro(
         _MapCarry(
             labels=s.labels, hist=s.map_hist, hood_energy=s.hood_energy,
             i=s.map_i, done=s.map_done, diverged=jnp.bool_(False),
+            msums=jnp.zeros((3, s.mu.shape[0]), jnp.float32),
         ),
         active=active,
+        precision=config.precision,
     )
     # Would the inner while_loop take another step?  (run_em's map cond.)
     # Divergence is already folded into mc.done, so a poisoned lane hits
@@ -573,8 +633,15 @@ def _tick_micro(
     map_exit = ~((mc.i < config.max_map_iters) & ~mc.done)
 
     # EM boundary work, computed unconditionally and selected in: identical
-    # values to run_em's em_body at the moment the inner loop exits.
-    mu_b, sigma_b, sum_w_b = E.update_parameters_stats(model, mc.labels, mode)
+    # values to run_em's em_body at the moment the inner loop exits.  The
+    # fused-tick route's accumulators come straight from the launch — this
+    # is what makes a lane-tick exactly one kernel boundary (DESIGN.md §16).
+    if mode == "static-pallas" and not ctx.sharded:
+        mu_b, sigma_b, sum_w_b = E.params_from_stats(
+            model, mc.msums[0], mc.msums[1], mc.msums[2]
+        )
+    else:
+        mu_b, sigma_b, sum_w_b = E.update_parameters_stats(model, mc.labels, mode)
     div_b = (
         mc.diverged
         | ~jnp.all(jnp.isfinite(mu_b))
@@ -894,8 +961,7 @@ def run_em_ticked(
     (labels, mu, sigma, iteration counts — tested bitwise); per-hood
     energies agree to float-reduction tolerance (DESIGN.md §12).
     """
-    if config.mode not in MODES:
-        raise ValueError(f"unknown mode {config.mode!r}; have {MODES}")
+    _validate_config(config)
     if config.max_em_iters < 1 or config.max_map_iters < 1:
         raise ValueError("run_em_ticked requires max_em_iters/max_map_iters >= 1")
     if tick_iters < 1:

@@ -487,6 +487,66 @@ def map_step_fused(
     return new.at[hoods.n_regions].set(0), hood_e
 
 
+def em_tick_fused(
+    hoods: Hoods,
+    model: EnergyModel,
+    sctx: StaticMapContext,
+    labels: Array,
+    mu: Array,
+    sigma: Array,
+    hist: Array,
+    *,
+    backend: Optional[str] = None,
+    active: Optional[Array] = None,
+    precision: str = "f32",
+    conv_tol: float = 1.0e-4,
+) -> Tuple[Array, Array, Array, Array, Array, Array]:
+    """One whole EM tick in a single kernel launch (DESIGN.md §16).
+
+    Unlike :func:`map_step_fused`, NO keyed reduction runs outside the
+    launch: the per-(hood, label) counts, per-hood energy sums, label
+    votes, M-step accumulators, and the convergence predicate over
+    ``hist`` all happen inside ``kops.fused_em_tick``.  Single-device
+    (LOCAL-context) route only — the sharded path keeps
+    :func:`map_step_fused`, whose collectives sit between the count,
+    hood-sum, and vote stages.
+
+    ``hist`` is the MAP convergence ring *before* this iteration's roll;
+    the returned ``conv`` is the window predicate on the post-roll ring
+    (the ``i > WINDOW`` gate stays with the caller).  ``active`` masks a
+    retired lane's hood sums to exact zeros (labels/params of masked
+    lanes are frozen by the ticked driver's select, DESIGN.md §12).
+
+    Returns ``(labels, hood_e, conv, sum_w, sum_wy, sum_wyy)``.
+    """
+    x = labels[hoods.vertex]
+    xf = x.astype(jnp.float32) * sctx.validf
+    sig = jnp.maximum(sigma, model.sigma_min)
+    new_labels, hood_e, _votes, conv, sum_w, sum_wy, sum_wyy = kops.fused_em_tick(
+        sctx.y,
+        sctx.w,
+        sctx.nall_e,
+        xf,
+        sctx.validf,
+        hoods.hood_id,
+        hoods.vertex,
+        model.region_mean,
+        model.region_weight,
+        hist,
+        mu,
+        sig,
+        model.beta,
+        n_hoods=hoods.n_hoods,
+        n_vertices=hoods.n_regions + 1,
+        precision=precision,
+        conv_tol=conv_tol,
+        backend=backend,
+    )
+    if active is not None:
+        hood_e = jnp.where(active, hood_e, 0.0)
+    return new_labels, hood_e, conv, sum_w, sum_wy, sum_wyy
+
+
 def update_parameters(
     model: EnergyModel, labels: Array, mode: str
 ) -> Tuple[Array, Array]:
@@ -528,6 +588,19 @@ def update_parameters_stats(
     sum_w = dpp.reduce_by_key(seg, sw, n_labels, op="add", indices_are_sorted=sorted_flag)
     sum_wy = dpp.reduce_by_key(seg, sw * sy, n_labels, op="add", indices_are_sorted=sorted_flag)
     sum_wyy = dpp.reduce_by_key(seg, sw * sy * sy, n_labels, op="add", indices_are_sorted=sorted_flag)
+    return params_from_stats(model, sum_w, sum_wy, sum_wyy)
+
+
+def params_from_stats(
+    model: EnergyModel, sum_w: Array, sum_wy: Array, sum_wyy: Array
+) -> Tuple[Array, Array, Array]:
+    """The M-step's closed form from its three per-label accumulators.
+
+    Split out of :func:`update_parameters_stats` so the fused-tick route
+    (DESIGN.md §16) — whose kernel emits ``sum_w``/``sum_wy``/``sum_wyy``
+    directly — finishes the M-step with the *identical* tail arithmetic
+    (same op order, including the cluster-death reseed).
+    """
     safe_w = jnp.maximum(sum_w, 1e-6)
     mu = sum_wy / safe_w
     var = jnp.maximum(sum_wyy / safe_w - mu * mu, 0.0)

@@ -34,6 +34,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 
 from repro.kernels import ref
+from repro.kernels.em_tick import fused_em_tick_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.map_step import BLOCK as MAP_STEP_BLOCK
 from repro.kernels.map_step import SEG_ALIGN, fused_map_step_pallas
@@ -254,6 +255,88 @@ def fused_map_step(
     return _dispatch("fused_map_step", backend)(
         y, w, cnt_e, nall_e, xf, valid, hood_id, vertex, mu, sigma, beta,
         n_hoods=n_hoods, n_vertices=n_vertices,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_em_tick — the whole EM tick (counts + MAP + M-step + convergence)
+# in one launch (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+register("fused_em_tick", "xla")(ref.fused_em_tick)
+
+
+@register("fused_em_tick", "pallas-tpu")
+def _fused_em_tick_tpu(y, w, nall_e, xf, valid, hood_id, vertex, region_mean,
+                       region_weight, hist, mu, sigma, beta, *,
+                       n_hoods, n_vertices, precision, conv_tol):
+    return fused_em_tick_pallas(
+        y, w, nall_e, xf, valid, hood_id, vertex, region_mean, region_weight,
+        hist, mu, sigma, beta, n_hoods=n_hoods, n_vertices=n_vertices,
+        precision=precision, conv_tol=conv_tol, interpret=False,
+    )
+
+
+@register("fused_em_tick", "pallas-interpret")
+def _fused_em_tick_interp(y, w, nall_e, xf, valid, hood_id, vertex, region_mean,
+                          region_weight, hist, mu, sigma, beta, *,
+                          n_hoods, n_vertices, precision, conv_tol):
+    return fused_em_tick_pallas(
+        y, w, nall_e, xf, valid, hood_id, vertex, region_mean, region_weight,
+        hist, mu, sigma, beta, n_hoods=n_hoods, n_vertices=n_vertices,
+        precision=precision, conv_tol=conv_tol, interpret=True,
+    )
+
+
+def fused_em_tick(
+    y: Array,
+    w: Array,
+    nall_e: Array,
+    xf: Array,
+    valid: Array,
+    hood_id: Array,
+    vertex: Array,
+    region_mean: Array,
+    region_weight: Array,
+    hist: Array,
+    mu: Array,
+    sigma: Array,
+    beta,
+    *,
+    n_hoods: int,
+    n_vertices: int,
+    precision: str = "f32",
+    conv_tol: float = 1.0e-4,
+    backend: Optional[str] = None,
+) -> Tuple[Array, ...]:
+    """Fused EM tick: one launch for counts + MAP iterate + M-step +
+    convergence.  Returns ``(labels, hood_e, votes, conv, sum_w, sum_wy,
+    sum_wyy)`` (DESIGN.md §16).
+
+    Shares ``fused_map_step``'s VMEM guard: the kernel holds both one-hot
+    tiles at once, so oversized segment spaces fall back to the reference
+    composition (which still fuses at the XLA level — no per-tick sort,
+    one trace).
+    """
+    requested = backend
+    backend = resolve_backend(backend)
+    if backend != "xla":
+        pad = lambda s: -(-s // SEG_ALIGN) * SEG_ALIGN
+        onehot_bytes = (pad(n_hoods) + pad(n_vertices)) * MAP_STEP_BLOCK * 4
+        if onehot_bytes > MAX_ONEHOT_BYTES:
+            if backend_explicitly_requested(requested):
+                warnings.warn(
+                    f"fused_em_tick: one-hot tiles for (n_hoods={n_hoods}, "
+                    f"n_vertices={n_vertices}) need {onehot_bytes/2**20:.1f} "
+                    f"MB VMEM (> {MAX_ONEHOT_BYTES/2**20:.0f} MB); falling "
+                    f"back from {backend!r} to the 'xla' composition",
+                    stacklevel=2,
+                )
+            backend = "xla"
+    return _dispatch("fused_em_tick", backend)(
+        y, w, nall_e, xf, valid, hood_id, vertex, region_mean, region_weight,
+        hist, mu, sigma, beta, n_hoods=n_hoods, n_vertices=n_vertices,
+        precision=precision, conv_tol=conv_tol,
     )
 
 

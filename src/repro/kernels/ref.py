@@ -118,6 +118,88 @@ def fused_map_step(
     return min_e, arg, hood_e, votes
 
 
+def fused_em_tick(
+    y: Array,
+    w: Array,
+    nall_e: Array,
+    xf: Array,
+    valid: Array,
+    hood_id: Array,
+    vertex: Array,
+    region_mean: Array,
+    region_weight: Array,
+    hist: Array,
+    mu: Array,
+    sigma: Array,
+    beta: Array | float,
+    *,
+    n_hoods: int,
+    n_vertices: int,
+    precision: str = "f32",
+    conv_tol: float = 1.0e-4,
+) -> Tuple[Array, ...]:
+    """Oracle for the fused EM-tick kernel (``em_tick.py``).
+
+    The energy expressions come from the SAME helper the kernel uses
+    (``em_tick.label_energies_blocked``), so energies/argmins agree
+    bitwise at both precisions.  The keyed reductions run in
+    ``jax.ops.segment_sum`` element order: counts and votes are
+    integer-exact (bitwise equal to the kernel's one-hot dots), the
+    per-hood energy sums match ``fused_map_step``'s reference order, and
+    the M-step sums match ``energy.update_parameters_stats``'s order —
+    which is why this composition stays bitwise against the golden
+    fixtures while the kernel's dot-ordered M-sums may drift in final
+    ulps.  Returns ``(labels, hood_e, votes, conv, sum_w, sum_wy,
+    sum_wyy)``.
+    """
+    from repro.kernels import em_tick as _em_tick
+
+    n_labels = int(mu.shape[0])
+    seg_h = jnp.where(valid > 0, hood_id, n_hoods).astype(jnp.int32)
+    xi = jnp.clip(xf.astype(jnp.int32), 0, n_labels - 1)
+    counts = jax.ops.segment_sum(
+        valid, seg_h * n_labels + xi, num_segments=(n_hoods + 1) * n_labels
+    ).reshape(n_hoods + 1, n_labels)
+    cnt_e = counts[jnp.clip(hood_id, 0, n_hoods - 1)].T  # (K, H)
+
+    energies = _em_tick.label_energies_blocked(
+        y, w, cnt_e, nall_e, xf, valid, mu, sigma, beta, precision=precision
+    )
+    min_e = jnp.min(energies, axis=0).astype(jnp.float32)
+    arg = jnp.argmin(energies, axis=0).astype(jnp.int32)
+
+    hood_e = jax.ops.segment_sum(
+        min_e * valid, seg_h, num_segments=n_hoods + 1
+    )[:n_hoods]
+    seg_v = jnp.where(valid > 0, vertex, n_vertices).astype(jnp.int32)
+    votes = (
+        jax.ops.segment_sum(
+            valid,
+            seg_v * n_labels + arg,
+            num_segments=(n_vertices + 1) * n_labels,
+        )
+        .reshape(n_vertices + 1, n_labels)
+        .T[:, :n_vertices]
+    )
+    labels = jnp.argmax(votes, axis=0).astype(jnp.int32)
+    labels = labels.at[n_vertices - 1].set(0)
+
+    sum_w = jax.ops.segment_sum(region_weight, labels, num_segments=n_labels)
+    sum_wy = jax.ops.segment_sum(
+        region_weight * region_mean, labels, num_segments=n_labels
+    )
+    sum_wyy = jax.ops.segment_sum(
+        region_weight * region_mean * region_mean, labels, num_segments=n_labels
+    )
+
+    scale = jnp.maximum(jnp.abs(hood_e), 1.0)
+    ok = jnp.abs(hood_e - hist[0, :n_hoods]) < conv_tol * scale
+    for r in range(int(hist.shape[0]) - 2):
+        ok = ok & (jnp.abs(hist[r, :n_hoods] - hist[r + 1, :n_hoods]) < conv_tol * scale)
+    conv = jnp.all(ok)
+    return labels, hood_e, votes, conv, sum_w, sum_wy, sum_wyy
+
+
 def flash_attention(
     q: Array, k: Array, v: Array, *, causal: bool = False, scale: float | None = None
 ) -> Array:

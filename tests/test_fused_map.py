@@ -219,6 +219,7 @@ def test_fused_path_issues_fewer_launches_per_iteration():
         i=jnp.int32(0),
         done=jnp.bool_(False),
         diverged=jnp.bool_(False),
+        msums=jnp.zeros((3, 2), jnp.float32),
     )
 
     def step(mode, backend, sctx):
@@ -244,9 +245,11 @@ def test_fused_path_issues_fewer_launches_per_iteration():
     assert n_static >= 4
     assert n_fused < n_static
     assert n_fused == 0
-    # ... and the fused path really is kernel launches, not hidden scatters:
-    # one segment-reduce (label counts) + one fused map-step kernel.
-    assert _count_prims(fused_jaxpr, {"pallas_call"}) == 2
+    # ... and the fused path really is kernel launches, not hidden scatters.
+    # The fused EM tick (DESIGN.md §16) folds the label-count pass into the
+    # launch itself, so a whole MAP iteration is exactly ONE pallas_call
+    # (it was two: segment-reduce counts + fused map-step).
+    assert _count_prims(fused_jaxpr, {"pallas_call"}) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -198,6 +198,74 @@ def test_mode_matches_golden_oracle(mode, backend, n_labels):
 
 
 # ---------------------------------------------------------------------------
+# precision tiers (DESIGN.md §16): the fused-tick precision knob gates a
+# tolerance tier, never silently relaxes the bitwise one
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_labels", sorted(CASES))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bf16_tolerance_tier(backend, n_labels):
+    """bf16 energy arithmetic: bounded drift against the f32 fixtures.
+
+    The bf16 path quantizes only the per-element energies (f32
+    accumulators, f32 M-step), so on the pinned problems the argmin
+    decisions — and with them the labels, iteration counts, and the
+    label-derived parameters — are expected to survive quantization;
+    the accumulated total energy carries the visible drift.
+    """
+    labels, meta = _load_fixture(n_labels)
+    prob, labels0, mu0, sigma0 = _build_problem(n_labels)
+    res = em_mod.run_em(
+        prob.hoods, prob.model,
+        jnp.asarray(labels0), jnp.asarray(mu0), jnp.asarray(sigma0),
+        em_mod.EMConfig(
+            mode="static-pallas", backend=backend, precision="bf16",
+            max_em_iters=MAX_EM, max_map_iters=MAX_MAP,
+        ),
+    )
+    tag = f"bf16 backend={backend} K={n_labels}"
+    agree = float(np.mean(np.asarray(res.labels) == labels))
+    assert agree >= 0.95, f"{tag}: label agreement {agree:.4f}"
+    np.testing.assert_allclose(
+        np.asarray(res.mu), np.asarray(meta["mu"], np.float32),
+        rtol=0.02, err_msg=tag,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.sigma), np.asarray(meta["sigma"], np.float32),
+        rtol=0.02, err_msg=tag,
+    )
+    np.testing.assert_allclose(
+        float(res.total_energy), meta["total_energy"], rtol=0.02, err_msg=tag
+    )
+
+
+@pytest.mark.parametrize("n_labels", [2, 5])
+def test_f32_knob_stays_bitwise(n_labels):
+    """precision='f32' spelled explicitly is the bitwise tier — identical
+    to the default-knob matrix above, pinned here so a future default flip
+    can't silently downgrade the contract."""
+    labels, meta = _load_fixture(n_labels)
+    prob, labels0, mu0, sigma0 = _build_problem(n_labels)
+    res = em_mod.run_em(
+        prob.hoods, prob.model,
+        jnp.asarray(labels0), jnp.asarray(mu0), jnp.asarray(sigma0),
+        em_mod.EMConfig(
+            mode="static-pallas", backend="pallas-interpret",
+            precision="f32", max_em_iters=MAX_EM, max_map_iters=MAX_MAP,
+        ),
+    )
+    np.testing.assert_array_equal(np.asarray(res.labels), labels)
+    assert int(res.em_iters) == meta["em_iters"]
+    np.testing.assert_array_equal(
+        np.asarray(res.mu), np.asarray(meta["mu"], np.float32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.sigma), np.asarray(meta["sigma"], np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
 # the ticked serving pool reproduces the oracle too (static fast path)
 # ---------------------------------------------------------------------------
 
