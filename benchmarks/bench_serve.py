@@ -1,4 +1,5 @@
-"""Serving-engine throughput: serial vs lockstep-batched vs continuous.
+"""Serving-engine latency/throughput: serial vs lockstep vs continuous,
+plus a paced-arrival latency-SLO sweep (DESIGN.md §17).
 
 The workload is the exact case that produced BENCH_api.json's
 ``batched_speedup_x: 0.45`` inversion: a stream of same-bucket requests
@@ -7,29 +8,45 @@ it, all through one warm session (compiles excluded from every timing):
 
 * ``serial``       — one warm ``execute()`` per request; each request pays
                      exactly its own iterations, plus per-request dispatch.
-* ``lockstep8``    — ``submit()``/``drain()`` micro-batching in groups of
-                     8: one vmapped ``run_em_batched`` launch per group, so
-                     every lane pays the *slowest* lane's (EM- and
-                     MAP-level) iteration count.
-* ``continuous8``  — the ticked serving engine (DESIGN.md §12): 8 slots,
-                     converged lanes retired and refilled between ticks, so
-                     a lane only ever pays its own iterations plus at most
-                     one tick of granularity waste.
+* ``lockstep``     — ``submit()``/``drain()`` micro-batching in groups of
+                     ``SLOTS``: one vmapped ``run_em_batched`` launch per
+                     group, so every lane pays the *slowest* lane's (EM-
+                     and MAP-level) iteration count.
+* ``continuous``   — the ticked serving engine (DESIGN.md §12/§17):
+                     ``SLOTS`` slots, adaptive ``tick_iters="auto"``,
+                     converged lanes retired at the next tick boundary (the
+                     driver exits a tick early once the whole pool is done).
 
-Emits ``BENCH_serve.json`` with wall/throughput/latency percentiles per
-path.  The acceptance target of the serving PR: ``continuous8`` at or
-above serial throughput on CPU (lockstep sits well below), with
-per-request labels bit-identical to serial ``run_em``.
+``SLOTS`` is 4: pool width should track the machine's actual parallelism,
+and the bench host is a single core, so a pool micro-step costs ~width x
+a serial step.  Measured here, width 4 matches width 8 on batch-dump
+throughput (~16 rps both) while halving a lone request's residence
+(0.21s vs 0.41s) — extra width a single core can't execute buys nothing
+but latency (DESIGN.md §17).
 
-A fault-rate sweep (0% / 5% / 20% poisoned requests via the chaos
-harness's ``bad_init`` class, DESIGN.md §14) measures healthy-lane
-throughput retention: poisoned lanes diverge at their first EM boundary
-and are quarantined, so the healthy stream's throughput must stay within
-10% of the clean run (the fault-tolerance PR's acceptance target at 5%).
+Single-point numbers lie about serving (that is how the 0.67x regression
+shipped behind a "1.15x" headline), so the continuous path is also
+measured under **paced arrivals**: requests arrive at a fixed offered
+rate expressed as a multiple of the measured serial throughput, and the
+engine reports ``queue_s`` (waiting for a slot) and ``residence_s``
+(resident in a lane) separately.  The emitted ``slo_curve`` gives, per
+latency budget (a multiple of serial p50), the highest offered load whose
+attained p95 stays within it — a curve, not a point.
+
+Gates (hard assertions under ``benchmarks.run --check``):
+
+* continuous batch-dump throughput >= 1.0x serial;
+* continuous latency p50 under light paced load (lowest offered
+  multiple) <= 5x serial p50.
+
+Always asserted, check-mode or not: per-request labels bit-identical to
+serial ``run_em``, and healthy-lane throughput retention >= 90% under 5%
+poisoned requests (the fault-tolerance PR's target, DESIGN.md §14).
 """
 
 from __future__ import annotations
 
+import contextlib
 import json
 import pathlib
 import time
@@ -37,28 +54,71 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import print_csv
 from repro import api
 from repro.core import synthetic
 from repro.core.pmrf import em as em_mod
 from repro.serving import SegmentationEngine
+from repro.serving.engine import DEFAULT_TICK_LADDER
 from repro.testing import chaos as chaos_mod
 
 OUT_PATH = pathlib.Path("BENCH_serve.json")
 N_REQUESTS = 24
-SLOTS = 8
-TICK_ITERS = 8
+SLOTS = 4
 SHAPE = (96, 96)
 GRID = (12, 12)
 POISON_RATES = (0.05, 0.20)
+#: Paced-arrival offered loads, as multiples of measured serial throughput.
+OFFERED_MULTIPLES = (0.6, 0.9, 1.2)
+#: Latency budgets for the SLO curve, as multiples of serial p50.
+SLO_MULTIPLES = (2.0, 5.0, 10.0)
 
 
-def _percentiles(lat):
+def _percentiles(lat, prefix="latency"):
     lat = np.asarray(lat, np.float64)
     return {
-        "latency_p50_s": round(float(np.percentile(lat, 50)), 5),
-        "latency_p95_s": round(float(np.percentile(lat, 95)), 5),
+        f"{prefix}_p50_s": round(float(np.percentile(lat, 50)), 5),
+        f"{prefix}_p95_s": round(float(np.percentile(lat, 95)), 5),
     }
+
+
+def _latency_block(completions):
+    """Honest three-way latency accounting (DESIGN.md §17): queue and
+    residence reported separately, never folded into one number."""
+    out = {}
+    out.update(_percentiles([c.latency_s for c in completions], "latency"))
+    out.update(_percentiles([c.queue_s for c in completions], "queue"))
+    out.update(_percentiles([c.residence_s for c in completions], "residence"))
+    return out
+
+
+def _paced_run(sess, plans, bucket, offered_rps):
+    """Drive one adaptive engine with requests arriving every
+    ``1/offered_rps`` seconds; returns (completions, stats, attained_rps).
+
+    The engine ticks whenever it has live work and sleeps until the next
+    arrival otherwise, so queue time is a function of offered load, not of
+    the driver loop's politeness.
+    """
+    eng = SegmentationEngine(
+        sess, max_batch=SLOTS, tick_iters="auto", bucket=bucket
+    )
+    interval = 1.0 / offered_rps
+    nxt = 0
+    t0 = time.perf_counter()
+    while nxt < len(plans) or eng.pending() or eng.active():
+        now = time.perf_counter() - t0
+        while nxt < len(plans) and nxt * interval <= now:
+            eng.submit(plans[nxt], rid=nxt)
+            nxt += 1
+        if eng.pending() or eng.active():
+            eng.step()
+        elif nxt < len(plans):
+            time.sleep(max(0.0, nxt * interval - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    comps = eng.run()   # pool already drained; collects the completions
+    return comps, eng.stats(), len(comps) / wall
 
 
 def run() -> dict:
@@ -75,13 +135,28 @@ def run() -> dict:
     bucket = api.BucketKey(*(max(p.bucket[d] for p in plans) for d in range(3)))
 
     # Warm every executable + padding memo up front: this bench measures
-    # steady-state serving, compiles are BENCH_api.json's subject.
+    # steady-state serving, compiles are BENCH_api.json's subject.  The
+    # adaptive engine switches between ladder sizes, so the whole ladder
+    # is warmed (the engine would also compile it at pool bring-up, but
+    # that would land inside the timed region).
     sess.compile(bucket)
     sess.compile(bucket, batch=SLOTS)
-    sess.compile_ticked(bucket, batch=SLOTS, tick_iters=TICK_ITERS)
+    for t in DEFAULT_TICK_LADDER:
+        sess.compile_ticked(bucket, batch=SLOTS, tick_iters=t)
     serial_results = [
         sess.execute(p, bucket=bucket) for p in plans
     ]  # also warms _pad_plan memos
+    for p in plans:
+        sess.lane_state(p, bucket=bucket)  # admission memos (§17)
+    # A throwaway pool drive compiles the engine-layer host jits
+    # (_write_pools / _read_lane / _mark_done / ...) — once-per-process
+    # costs that would otherwise land inside the continuous timing.
+    warm_eng = SegmentationEngine(
+        sess, max_batch=SLOTS, tick_iters="auto", bucket=bucket
+    )
+    for rid, p in enumerate(plans[:2]):
+        warm_eng.submit(p, rid=rid)
+    warm_eng.run()
 
     # -- serial: per-request latency is each request's own execute. -------
     t0 = time.perf_counter()
@@ -91,8 +166,10 @@ def run() -> dict:
         sess.execute(p, bucket=bucket)
         lat_serial.append(time.perf_counter() - t1)
     serial_wall = time.perf_counter() - t0
+    serial_rps = N_REQUESTS / serial_wall
+    serial_p50 = float(np.percentile(lat_serial, 50))
 
-    # -- lockstep: groups of 8 through one vmapped launch each. -----------
+    # -- lockstep: groups of SLOTS through one vmapped launch each. -------
     t0 = time.perf_counter()
     lat_lockstep = []
     for start in range(0, N_REQUESTS, SLOTS):
@@ -104,16 +181,16 @@ def run() -> dict:
         lat_lockstep.extend([time.perf_counter() - t1] * len(group))
     lockstep_wall = time.perf_counter() - t0
 
-    # -- continuous: the ticked engine over the same stream. ---------------
+    # -- continuous batch-dump: all 24 submitted at t=0 (the saturation/
+    # throughput view; queue_s dominates latency here by construction). ---
     engine = SegmentationEngine(
-        sess, max_batch=SLOTS, tick_iters=TICK_ITERS, bucket=bucket
+        sess, max_batch=SLOTS, tick_iters="auto", bucket=bucket
     )
     t0 = time.perf_counter()
     for rid, p in enumerate(plans):
         engine.submit(p, rid=rid)
     completions = engine.run()
     continuous_wall = time.perf_counter() - t0
-    lat_continuous = [c.latency_s for c in completions]
 
     # Per-request label bit-identity vs serial run_em (the §12 contract).
     identical = all(
@@ -123,16 +200,63 @@ def run() -> dict:
         for c in completions
     )
 
+    # -- paced-arrival SLO sweep: offered load as multiples of serial. -----
+    paced = {}
+    for mult in OFFERED_MULTIPLES:
+        comps, st, attained = _paced_run(sess, plans, bucket, mult * serial_rps)
+        paced[f"offered_{mult}x"] = {
+            "offered_rps": round(mult * serial_rps, 3),
+            "attained_rps": round(attained, 3),
+            **_latency_block(comps),
+            "final_tick_iters": st["tick_iters"],
+            "tick_switches": st["tick_switches"],
+            "steps_saved_early_exit": st["steps_saved_early_exit"],
+        }
+    # Attained throughput at p95 < X * serial_p50: the highest offered
+    # load whose measured p95 stays inside each latency budget.
+    slo_curve = {}
+    for x in SLO_MULTIPLES:
+        ok = [
+            row["attained_rps"]
+            for row in paced.values()
+            if row["latency_p95_s"] < x * serial_p50
+        ]
+        slo_curve[f"p95_lt_{x}x_serial_p50"] = round(max(ok), 3) if ok else 0.0
+
     # -- fault-rate sweep: healthy-lane throughput retention. --------------
-    # 0% is the continuous run above; 5% / 20% poison deterministic rids
-    # with the bad_init fault (NaN mu0 -> quarantined as `diverged` at the
-    # first EM boundary).  Retention compares healthy completions/sec
-    # against the clean run's total throughput.
-    clean_rps = N_REQUESTS / continuous_wall
+    # 5% / 20% poison deterministic rids with the bad_init fault (NaN mu0
+    # -> quarantined as `diverged` at the first EM boundary).  Retention
+    # compares healthy completions/sec against a clean drive measured
+    # inside the sweep — each point is best-of-2 fresh engine drives, so
+    # the baseline and the fault runs see the same adaptive-policy warmth
+    # and the ratio isn't polluted by single-run scheduler variance.
+    def _fault_drive(rids):
+        eng = SegmentationEngine(
+            sess, max_batch=SLOTS, tick_iters="auto", bucket=bucket
+        )
+        ctx = (
+            chaos_mod.inject(chaos_mod.ChaosConfig(seed=1, bad_init_rids=rids))
+            if rids
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            t0 = time.perf_counter()
+            for rid, p in enumerate(plans):
+                eng.submit(p, rid=rid)
+            comps = eng.run()
+            return comps, time.perf_counter() - t0
+
+    def _best_of_2(rids):
+        comps, wall = _fault_drive(rids)
+        comps2, wall2 = _fault_drive(rids)
+        return (comps2, wall2) if wall2 < wall else (comps, wall)
+
+    _, clean_wall = _best_of_2(())
+    clean_rps = N_REQUESTS / clean_wall
     fault_sweep = {
         "poison_0pct": {
             "poisoned_rids": [],
-            "wall_s": round(continuous_wall, 4),
+            "wall_s": round(clean_wall, 4),
             "healthy_rps": round(clean_rps, 3),
             "healthy_retention": 1.0,
         }
@@ -140,15 +264,7 @@ def run() -> dict:
     for rate in POISON_RATES:
         k = max(1, round(N_REQUESTS * rate))
         rids = tuple(range(0, N_REQUESTS, max(1, N_REQUESTS // k)))[:k]
-        eng = SegmentationEngine(
-            sess, max_batch=SLOTS, tick_iters=TICK_ITERS, bucket=bucket
-        )
-        with chaos_mod.inject(chaos_mod.ChaosConfig(seed=1, bad_init_rids=rids)):
-            t0 = time.perf_counter()
-            for rid, p in enumerate(plans):
-                eng.submit(p, rid=rid)
-            comps = eng.run()
-            wall = time.perf_counter() - t0
+        comps, wall = _best_of_2(rids)
         healthy = [c for c in comps if c.rid not in rids]
         quarantined = [c for c in comps if c.rid in rids]
         healthy_rps = len(healthy) / wall
@@ -170,7 +286,8 @@ def run() -> dict:
     return {
         "n_requests": N_REQUESTS,
         "slots": SLOTS,
-        "tick_iters": TICK_ITERS,
+        "tick_policy": "auto",
+        "tick_ladder": list(DEFAULT_TICK_LADDER),
         "bucket": list(bucket),
         "backend": cfg.resolved_backend(),
         "jax_backend": jax.default_backend(),
@@ -181,20 +298,22 @@ def run() -> dict:
         ],
         "serial": {
             "wall_s": round(serial_wall, 4),
-            "throughput_rps": round(N_REQUESTS / serial_wall, 3),
+            "throughput_rps": round(serial_rps, 3),
             **_percentiles(lat_serial),
         },
-        "lockstep8": {
+        "lockstep": {
             "wall_s": round(lockstep_wall, 4),
             "throughput_rps": round(N_REQUESTS / lockstep_wall, 3),
             **_percentiles(lat_lockstep),
         },
-        "continuous8": {
+        "continuous": {
             "wall_s": round(continuous_wall, 4),
             "throughput_rps": round(N_REQUESTS / continuous_wall, 3),
-            **_percentiles(lat_continuous),
+            **_latency_block(completions),
             "engine": engine.stats(),
         },
+        "paced": paced,
+        "slo_curve": slo_curve,
         "lockstep_vs_serial_x": round(serial_wall / lockstep_wall, 2),
         "continuous_vs_serial_x": round(serial_wall / continuous_wall, 2),
         "labels_identical_to_serial": bool(identical),
@@ -208,12 +327,25 @@ def main() -> None:
     OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
     print_csv(
         f"serving: serial vs lockstep vs continuous -> {OUT_PATH}",
-        ["serial_s", "lockstep8_s", "continuous8_s", "lockstep_x",
+        ["serial_s", "lockstep_s", "continuous_s", "lockstep_x",
          "continuous_x", "identical"],
-        [(result["serial"]["wall_s"], result["lockstep8"]["wall_s"],
-          result["continuous8"]["wall_s"], result["lockstep_vs_serial_x"],
+        [(result["serial"]["wall_s"], result["lockstep"]["wall_s"],
+          result["continuous"]["wall_s"], result["lockstep_vs_serial_x"],
           result["continuous_vs_serial_x"],
           result["labels_identical_to_serial"])],
+    )
+    print_csv(
+        "paced arrivals: offered load vs attained throughput and latency",
+        ["offered", "offered_rps", "attained_rps", "queue_p50_s",
+         "residence_p50_s", "latency_p95_s", "final_tick"],
+        [(name, row["offered_rps"], row["attained_rps"], row["queue_p50_s"],
+          row["residence_p50_s"], row["latency_p95_s"],
+          row["final_tick_iters"]) for name, row in result["paced"].items()],
+    )
+    print_csv(
+        "SLO curve: attained rps at p95 < X x serial p50",
+        list(result["slo_curve"].keys()),
+        [tuple(result["slo_curve"].values())],
     )
     assert result["labels_identical_to_serial"], (
         "continuous serving must be bit-identical to serial run_em"
@@ -232,6 +364,18 @@ def main() -> None:
     assert sweep["poison_5pct"]["healthy_identical_to_serial"], (
         "healthy lanes must stay bit-identical to serial under poison"
     )
+    if common.CHECK:
+        x = result["continuous_vs_serial_x"]
+        assert x >= 1.0, (
+            f"continuous serving regressed below serial: {x}x < 1.0x "
+            "(the §17 gate; see DESIGN.md §17 for the last post-mortem)"
+        )
+        light = result["paced"][f"offered_{OFFERED_MULTIPLES[0]}x"]
+        p50 = result["serial"]["latency_p50_s"]
+        assert light["latency_p50_s"] <= 5.0 * p50, (
+            "continuous p50 under light load must stay <= 5x serial p50, "
+            f"got {light['latency_p50_s']}s vs serial {p50}s"
+        )
 
 
 if __name__ == "__main__":

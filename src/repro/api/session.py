@@ -473,8 +473,9 @@ class Segmenter:
         """Compile (or fetch) the ticked serving executable for a bucket.
 
         The program is ``em.run_em_ticked`` over a ``batch``-slot pool:
-        each call advances every non-``done`` lane by ``tick_iters`` masked
-        micro-steps and returns the new pool state.  It shares the session
+        each call advances every non-``done`` lane by up to ``tick_iters``
+        masked micro-steps (exiting early once the whole pool is done) and
+        returns ``(new pool state, steps executed)``.  It shares the session
         LRU cache with the run-to-convergence executables (distinct
         ``ExecutableKey.tick_iters``) and performs zero traces on a warm
         hit.  The serving engine (``repro.serving``) is the intended
@@ -555,6 +556,30 @@ class Segmenter:
         ``execute``'s padding)."""
         bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
         return self._pad_plan(plan, bucket, seed)
+
+    def lane_state(
+        self, plan: Plan, *, bucket: Optional[BucketKey] = None, seed: int = 0
+    ):
+        """One request's admission-ready lane: ``(hoods, model, lane_state,
+        vote_plan)``, i.e. :meth:`lane_inputs` with the per-lane
+        :class:`em.TickState` and :class:`em.TickVotePlan` already built.
+        Memoized per plan alongside the padding (§17): the argsort behind
+        the vote plan and the initial lane state are pure functions of the
+        padded inputs, so steady-state admission pays zero host-side
+        recomputation for repeat traffic."""
+        bucket = BucketKey(*bucket) if bucket is not None else plan.bucket
+        h1, m1, lab0, mu0, sig0 = self._pad_plan(plan, bucket, seed)
+        memo_key = (
+            "lane", bucket, seed, self.config.init, self.config.shards,
+            self.config.n_labels,
+        )
+        cached = plan._padded.get(memo_key)
+        if cached is None:
+            lane = em_mod.init_tick_lane(lab0, mu0, sig0, bucket.n_hoods)
+            vplan = em_mod.make_vote_plan(h1.vertex, bucket.n_regions)
+            cached = plan._padded[memo_key] = (lane, vplan)
+        lane, vplan = cached
+        return h1, m1, lane, vplan
 
     def clear_cache(self) -> None:
         self._cache.clear()

@@ -769,11 +769,9 @@ def _pool_tick_micro(
     nh, nr = hoods.n_hoods, hoods.n_regions
     lane = jnp.arange(B, dtype=jnp.int32)
     active = ~s.done                                   # (B,)
-    activef = active[:, None]
     hid_flat = (hoods.hood_id + lane[:, None] * (nh + 1)).reshape(-1)
 
     def seg_sum_hood(values):                          # (B, cap) -> (B, nh+1)
-        values = jnp.where(activef, values, 0.0)
         return dpp.reduce_by_key(
             hid_flat, values.reshape(-1), B * (nh + 1), op="add",
             backend=backend,
@@ -795,23 +793,33 @@ def _pool_tick_micro(
     valid = hoods.valid
     validf = valid.astype(jnp.float32)
     x = jnp.take_along_axis(s.labels, hoods.vertex, axis=1)
-    # Per-(hood, label) counts: K run-sum passes over the hood runs (the
-    # run-boundary idiom has no key axis to widen, so K folds into a
-    # static unrolled loop of exact integer count reductions).
+    # Per-(hood, label) counts: K-1 run-sum passes over the hood runs plus
+    # one complement — counts are integer-valued floats far below 2^24, so
+    # ``cnt[0] = nall - sum(cnt[1:])`` is exact, and the K=2 instance
+    # collapses back to the original binary path's single n1 pass (the
+    # PR 5 K-ary generalization paid K passes here and one more per label
+    # in the vote scatter; that was the measured +33% per-micro-step
+    # regression in BENCH_serve — DESIGN.md §17).  Lane activity masks are
+    # *omitted* on these reductions: every keyed reduction is lane-isolated
+    # (lane-offset key spaces / per-lane run sums), and the final freeze
+    # select discards frozen lanes' values, so masking bought nothing but
+    # prevented XLA from hoisting the loop-invariant totals.
     eqs = [(x == l).astype(jnp.float32) for l in range(K)]
-    cnt_e = [
-        jnp.take_along_axis(
-            count_by_hood(jnp.where(activef, validf * eqs[l], 0.0)),
-            hoods.hood_id, axis=1,
-        )
-        for l in range(K)
-    ]
     nall = count_by_hood(validf)                       # loop-invariant
+    nall_e_full = jnp.take_along_axis(nall, hoods.hood_id, axis=1)
+    cnt_rest = [
+        jnp.take_along_axis(
+            count_by_hood(validf * eqs[l]), hoods.hood_id, axis=1
+        )
+        for l in range(1, K)
+    ]
+    cnt0 = nall_e_full - sum(cnt_rest) if K > 1 else nall_e_full
+    cnt_e = [cnt0] + cnt_rest
 
     y = jnp.take_along_axis(model.region_mean, hoods.vertex, axis=1)
     w = jnp.take_along_axis(model.region_weight, hoods.vertex, axis=1) * validf
     sig = jnp.maximum(s.sigma, model.sigma_min[:, None])   # (B, K)
-    nall_e = jnp.take_along_axis(nall, hoods.hood_id, axis=1)
+    nall_e = nall_e_full
     denom = jnp.maximum(nall_e - 1.0, 1.0)
     beta = model.beta[:, None]
 
@@ -832,18 +840,18 @@ def _pool_tick_micro(
     min_e = jnp.min(energies, axis=0)
     arg = jnp.argmin(energies, axis=0).astype(jnp.int32)   # ties -> lowest
     hood_e = seg_sum_hood(jnp.where(valid, min_e, 0.0))[:, :nh]
-    votes = jnp.stack(
-        [
-            count_by_vertex(
-                jnp.where(
-                    activef,
-                    jnp.where(valid, (arg == l).astype(jnp.float32), 0.0),
-                    0.0,
-                )
-            )
-            for l in range(K)
-        ]
-    )                                                   # (K, B, nr+1)
+    # Votes: K-1 passes + the loop-invariant total (every valid element
+    # casts exactly one vote, so the last label's tally is the exact
+    # integer complement — same trick as the counts above).
+    votes_all = count_by_vertex(validf)                 # loop-invariant
+    votes_rest = [
+        count_by_vertex(jnp.where(valid, (arg == l).astype(jnp.float32), 0.0))
+        for l in range(K - 1)
+    ]
+    votes_last = (
+        votes_all - sum(votes_rest) if K > 1 else votes_all
+    )
+    votes = jnp.stack(votes_rest + [votes_last])        # (K, B, nr+1)
     new_labels = jnp.argmax(votes, axis=0).astype(jnp.int32)  # plurality
     new_labels = new_labels.at[:, nr].set(0)
 
@@ -946,8 +954,9 @@ def run_em_ticked(
     vote_plan: TickVotePlan,
     config: EMConfig = EMConfig(),
     tick_iters: int = 8,
-) -> TickState:
-    """Advance a slot pool by ``tick_iters`` masked micro-steps (one tick).
+) -> tuple[TickState, Array]:
+    """Advance a slot pool by up to ``tick_iters`` masked micro-steps (one
+    tick); returns ``(state, steps_executed)``.
 
     All inputs carry a leading slot axis (the pool's ``max_batch``); static
     ``Hoods`` fields must hold the pool's shared bucket values, and
@@ -956,10 +965,21 @@ def run_em_ticked(
     ``state.done`` are frozen, so the host can retire them and write fresh
     requests into their slots between ticks without disturbing in-flight
     lanes — and without retracing, because the pool's shapes never change
-    (``TRACE_COUNTS["run_em_ticked"]``-tested).  The per-lane trajectory
-    reproduces :func:`run_em` exactly in every label-visible output
-    (labels, mu, sigma, iteration counts — tested bitwise); per-hood
-    energies agree to float-reduction tolerance (DESIGN.md §12).
+    (``TRACE_COUNTS["run_em_ticked"]``-tested).
+
+    The tick exits early once every lane is ``done`` (partial-tick exit):
+    the remaining micro-steps would all be full-pool freezes — bitwise
+    no-ops — so skipping them cannot change any state, but it returns
+    control to the host at the next *convergence* boundary instead of the
+    tick boundary.  That is what lets the serving engine retire converged
+    lanes promptly even under large tick sizes, and ``steps_executed``
+    (an int32 scalar, <= tick_iters) is how the engine's cost model and
+    residency accounting stay honest about work actually issued.
+
+    The per-lane trajectory reproduces :func:`run_em` exactly in every
+    label-visible output (labels, mu, sigma, iteration counts — tested
+    bitwise); per-hood energies agree to float-reduction tolerance
+    (DESIGN.md §12).
     """
     _validate_config(config)
     if config.max_em_iters < 1 or config.max_map_iters < 1:
@@ -972,7 +992,7 @@ def run_em_ticked(
 
     if mode == "static":
         # Flat pool-form fast path: one DPP problem, no batched scatters.
-        def body(_, st):
+        def micro(st):
             return _pool_tick_micro(hoods, model, vote_plan, backend, config, st)
     else:
         # faithful / static-pallas: per-lane sorts and kernel launches
@@ -987,7 +1007,16 @@ def run_em_ticked(
                 h, m, mode, backend, sctx, collectives.LOCAL, config, s
             )
 
-        def body(_, st):
+        def micro(st):
             return jax.vmap(lane)(hoods, model, st)
 
-    return jax.lax.fori_loop(0, tick_iters, body, state)
+    def cond(carry):
+        i, st = carry
+        return (i < tick_iters) & ~jnp.all(st.done)
+
+    def body(carry):
+        i, st = carry
+        return i + 1, micro(st)
+
+    steps, final = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+    return final, steps

@@ -4,6 +4,14 @@ per-request latency percentiles and throughput.
 
 ``--check`` re-runs every request through the serial ``run_em`` executable
 and exits non-zero on any label mismatch — the CI ``serve-smoke`` gate.
+``--latency-gate N`` (with ``--check``) additionally times a warm serial
+baseline and fails when the continuous healthy-lane **residence** p50
+(admit -> retire, the part the engine controls; queue wait in this
+batch-dump smoke is a pure function of oversubscription) exceeds ``N x``
+the serial p50 — the §17 regression gate at smoke scale.  The pool
+(every ladder size under ``--tick-iters auto``) and the serial
+executable are compiled before the timed window, so the gate measures
+serving, not compilation.
 
 ``--chaos`` activates the deterministic chaos harness (DESIGN.md §14):
 ``--poison-rate`` of the stream is assigned a fault class round-robin
@@ -33,6 +41,7 @@ import numpy as np
 from repro import api
 from repro.core import synthetic
 from repro.serving import SegmentationEngine
+from repro.serving.engine import DEFAULT_TICK_LADDER
 from repro.testing import chaos as chaos_mod
 
 #: Fault classes --chaos cycles through (round-robin over the poisoned rids).
@@ -57,8 +66,9 @@ def main() -> None:
     ap.add_argument("--shape", type=int, default=64, help="square slice edge")
     ap.add_argument("--grid", type=int, default=8, help="oversegmentation grid edge")
     ap.add_argument("--max-batch", type=int, default=8, help="engine slot count")
-    ap.add_argument("--tick-iters", type=int, default=8,
-                    help="masked micro-steps per engine tick")
+    ap.add_argument("--tick-iters", default="8",
+                    help="masked micro-steps per engine tick: an int, or "
+                         "'auto' for the adaptive ladder policy (§17)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "xla", "pallas-tpu", "pallas-interpret"))
     ap.add_argument("--mode", default="static",
@@ -73,6 +83,10 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="verify every lane result against serial run_em; "
                          "exit 1 on any label mismatch")
+    ap.add_argument("--latency-gate", type=float, default=0.0, metavar="N",
+                    help="with --check: fail when continuous healthy p50 "
+                         "residence (admit->retire) exceeds N x warm "
+                         "serial p50 (0 = off)")
     ap.add_argument("--chaos", action="store_true",
                     help="inject deterministic faults into the stream "
                          "(DESIGN.md §14); with --check, also gate on "
@@ -88,6 +102,18 @@ def main() -> None:
         ap.error("--requests must be >= 1")
     if not 0.0 <= args.poison_rate <= 1.0:
         ap.error("--poison-rate must be in [0, 1]")
+    if args.tick_iters == "auto":
+        tick_iters = "auto"
+    else:
+        try:
+            tick_iters = int(args.tick_iters)
+        except ValueError:
+            ap.error(f"--tick-iters must be an int or 'auto', got "
+                     f"{args.tick_iters!r}")
+    if args.latency_gate < 0:
+        ap.error("--latency-gate must be >= 0")
+    if args.latency_gate and not args.check:
+        ap.error("--latency-gate requires --check")
 
     cfg = api.ExecutionConfig(
         backend=args.backend, mode=args.mode,
@@ -128,8 +154,35 @@ def main() -> None:
         if faults.get(rid) != "nan_image"
     }
 
+    # Fix the pool bucket up front and compile outside the timed window:
+    # the serving numbers (and the --latency-gate) measure serving, not
+    # compilation.  An adaptive engine warms its whole ladder here.
+    bucket = None
+    if plans:
+        bucket = api.BucketKey(
+            *(max(p.bucket[d] for p in plans.values()) for d in range(3))
+        )
+        ladder = DEFAULT_TICK_LADDER if tick_iters == "auto" else (tick_iters,)
+        for t in ladder:
+            sess.compile_ticked(bucket, batch=args.max_batch, tick_iters=t)
+        if args.latency_gate:
+            sess.compile(bucket)
+            # Warm the per-plan padding and admission memos too: a cold
+            # pad compile or lane-state build at admission time would
+            # bill itself to whichever lanes happen to be resident.
+            for p in plans.values():
+                sess.lane_state(p, bucket=bucket, seed=args.seed)
+            # One throwaway single-request drive compiles the engine's
+            # module-level host jits (pool write/read/mark-done), which
+            # are once-per-process costs, not serving costs.
+            warm_eng = SegmentationEngine(
+                sess, max_batch=args.max_batch, tick_iters=tick_iters,
+                bucket=bucket,
+            )
+            warm_eng.submit(next(iter(plans.values())), rid=0, seed=args.seed)
+            warm_eng.run()
     engine = SegmentationEngine(
-        sess, max_batch=args.max_batch, tick_iters=args.tick_iters
+        sess, max_batch=args.max_batch, tick_iters=tick_iters, bucket=bucket
     )
     rejected = []
     with chaos_mod.inject(chaos_cfg) as monkey:
@@ -155,17 +208,25 @@ def main() -> None:
     by_rid = {c.rid: c for c in completions}
     healthy = [c for c in completions if c.rid not in faults]
     lat = np.array([c.latency_s for c in completions])
+    queue = np.array([c.queue_s for c in completions])
+    residence = np.array([c.residence_s for c in completions])
     report = {
         "requests": len(completions),
         "labels": args.labels,
         "max_batch": args.max_batch,
-        "tick_iters": args.tick_iters,
+        "tick_policy": "auto" if tick_iters == "auto" else "fixed",
         "bucket": list(engine.bucket),
         "wall_s": round(wall, 3),
         "throughput_rps": round(len(completions) / wall, 2),
         "healthy_rps": round(len(healthy) / wall, 2),
         "latency_p50_s": round(float(np.percentile(lat, 50)), 4),
         "latency_p95_s": round(float(np.percentile(lat, 95)), 4),
+        # Honest accounting (§17): latency = queue (waiting for a slot)
+        # + residence (resident in a lane), reported separately.
+        "queue_p50_s": round(float(np.percentile(queue, 50)), 4),
+        "queue_p95_s": round(float(np.percentile(queue, 95)), 4),
+        "residence_p50_s": round(float(np.percentile(residence, 50)), 4),
+        "residence_p95_s": round(float(np.percentile(residence, 95)), 4),
         "mean_em_iters": round(
             float(np.mean([c.result.em_iters for c in completions])), 2
         ),
@@ -184,9 +245,15 @@ def main() -> None:
     failures = []
     if args.check:
         # Healthy lanes must match serial run_em bitwise — chaos or not
-        # (serial reference runs OUTSIDE the chaos context).
+        # (serial reference runs OUTSIDE the chaos context).  The same
+        # executes double as the warm serial baseline for --latency-gate.
+        lat_serial = []
+        if args.latency_gate and healthy:
+            sess.execute(plans[healthy[0].rid], seed=args.seed)  # warm memos
         for c in sorted(healthy, key=lambda c: c.rid):
+            t1 = time.perf_counter()
             want = sess.execute(plans[c.rid], seed=args.seed)
+            lat_serial.append(time.perf_counter() - t1)
             if not (
                 np.array_equal(c.result.region_labels, want.region_labels)
                 and np.array_equal(c.result.segmentation, want.segmentation)
@@ -215,6 +282,23 @@ def main() -> None:
                         f"rid {rid}: never_converge lane status "
                         f"{by_rid[rid].status!r}, want 'evicted'"
                     )
+        # §17 latency gate: continuous healthy residence p50 vs the warm
+        # serial p50 just measured.  Residence (admit -> retire) is what
+        # the engine controls — tick granularity, early exit, per-tick
+        # host overhead; queue wait in this batch-dump smoke is set by
+        # the requests/slots ratio, which would gate the workload, not
+        # the engine.
+        if args.latency_gate and healthy:
+            serial_p50 = float(np.percentile(lat_serial, 50))
+            res_p50 = float(np.percentile([c.residence_s for c in healthy], 50))
+            report["serial_p50_s"] = round(serial_p50, 4)
+            report["latency_gate_x"] = round(res_p50 / max(serial_p50, 1e-9), 2)
+            if res_p50 > args.latency_gate * serial_p50:
+                failures.append(
+                    f"latency gate: continuous healthy residence p50 "
+                    f"{res_p50:.4f}s > {args.latency_gate}x serial p50 "
+                    f"{serial_p50:.4f}s"
+                )
         report["check"] = "ok" if not failures else failures
 
     print(json.dumps(report))

@@ -303,7 +303,7 @@ def test_ticked_pool_matches_golden_oracle(n_labels):
         (hoods, model, state, vplan), (h1, m1, lane, vp), 0
     )
     for _ in range(200):
-        state = exe(hoods, model, state, vplan)
+        state, _steps = exe(hoods, model, state, vplan)
         if bool(np.asarray(state.done)[0]):
             break
     else:

@@ -111,11 +111,20 @@ def test_run_em_ticked_driver_matches_run_em_directly():
     vplan_b = batched(em_mod.make_vote_plan(h.vertex, h.n_regions))
     state = batched(em_mod.init_tick_lane(l0, mu0, s0, h.n_hoods))
     ticks = 0
+    total_steps = 0
     while not bool(np.asarray(state.done)[0]):
-        state = em_mod.run_em_ticked(hoods_b, model_b, state, vplan_b, cfg, 7)
+        state, steps = em_mod.run_em_ticked(
+            hoods_b, model_b, state, vplan_b, cfg, 7
+        )
+        assert 1 <= int(steps) <= 7
+        total_steps += int(steps)
         ticks += 1
         assert ticks <= cfg.max_em_iters * cfg.max_map_iters
     got = em_mod.tick_result(jax.tree.map(lambda x: x[0], state))
+    # Early exit (partial-tick exit): the final tick stops at the
+    # convergence boundary, so the executed micro-steps equal the lane's
+    # total MAP iterations exactly — no riding out the tick.
+    assert total_steps == int(got.map_iters)
     np.testing.assert_array_equal(np.asarray(ref.labels), np.asarray(got.labels))
     np.testing.assert_array_equal(np.asarray(ref.mu), np.asarray(got.mu))
     np.testing.assert_array_equal(np.asarray(ref.sigma), np.asarray(got.sigma))
@@ -149,10 +158,102 @@ def test_deadline_ordered_admission():
     engine.submit(plans[2], rid=2, deadline_s=1.0)  # tightest: first
     completions = engine.run()
     assert [c.rid for c in completions] == [2, 0, 1]
-    # latency accounting is consistent: queue + service == latency
+    # honest latency split (DESIGN.md §17): queue + residence == latency,
+    # and the deprecated service_s alias still reads as residence
     for c in completions:
-        assert c.latency_s == pytest.approx(c.queue_s + c.service_s, abs=1e-3)
+        assert c.latency_s == pytest.approx(c.queue_s + c.residence_s, abs=1e-3)
+        assert c.service_s == c.residence_s
         assert c.ticks_resident >= 1
+
+
+def test_admission_is_deterministic_with_all_none_deadlines():
+    """Equal deadline keys (here: every deadline None) tie-break by rid —
+    admission order is a pure function of the submitted rids, not of heap
+    internals or submission order."""
+    sess = _session()
+    plans = _mixed_plans(sess, n=3)
+    for submit_order in ([2, 0, 1], [1, 2, 0], [0, 1, 2]):
+        engine = SegmentationEngine(sess, max_batch=1, tick_iters=8)
+        for rid in submit_order:
+            engine.submit(plans[rid], rid=rid)
+        completions = engine.run()
+        assert [c.rid for c in completions] == [0, 1, 2], submit_order
+    # non-int rids cannot enter the heap (they would break the tie-break)
+    engine = SegmentationEngine(sess, max_batch=1, tick_iters=8)
+    with pytest.raises(api.RequestError, match="rid must be an int"):
+        engine.submit(plans[0], rid="abc")
+
+
+def test_priority_classes_order_admission_before_deadlines():
+    sess = _session()
+    plans = _mixed_plans(sess, n=3)
+    engine = SegmentationEngine(sess, max_batch=1, tick_iters=8)
+    engine.submit(plans[0], rid=0, priority=1, deadline_s=0.5)  # background
+    engine.submit(plans[1], rid=1)                              # default
+    engine.submit(plans[2], rid=2, priority=-1)                 # urgent
+    completions = engine.run()
+    assert [c.rid for c in completions] == [2, 1, 0]
+
+
+def test_adaptive_tick_cache_per_size_no_retrace_no_alias():
+    """``ExecutableKey.tick_iters`` under adaptive ticking (DESIGN.md §17):
+    pool bring-up traces each ladder size exactly once, tick-size switches
+    hit the LRU warm (zero new traces — regardless of how many switches
+    happen), distinct sizes get distinct cache keys (never aliased), and
+    results stay bitwise serial-identical under any tick-size schedule."""
+    sess = _session()
+    plans = _mixed_plans(sess, n=5)
+    serial = [sess.execute(p, seed=0) for p in plans]
+    ladder = (1, 2, 4)
+    before = dict(em_mod.TRACE_COUNTS)
+    engine = SegmentationEngine(
+        sess, max_batch=2, tick_iters="auto", tick_ladder=ladder,
+        tick_hysteresis=1,
+    )
+    for rid, plan in enumerate(plans):
+        # tight deadlines drive the policy's deadline clamp to the
+        # smallest ladder size -> guaranteed switches to exercise
+        engine.submit(plan, rid=rid, seed=0, deadline_s=0.001)
+    completions = engine.run()
+    assert len(completions) == len(plans)
+    for c in completions:
+        _assert_matches_serial(c, serial[c.rid])
+    assert len(engine.tick_switches) >= 1
+    # the expired deadlines clamp the policy to the smallest size while
+    # lanes are live (a switch down to ladder[0] must be recorded); once
+    # the pool drains there are no live deadlines, so the policy is free
+    # to move back up — the final size is unconstrained beyond the ladder
+    assert any(to == ladder[0] for _, _, to in engine.tick_switches)
+    assert engine.tick_iters in ladder
+    # each distinct size hit the trace path exactly once, at bring-up;
+    # every switch afterwards was a warm cache hit
+    assert (
+        em_mod.TRACE_COUNTS["run_em_ticked"]
+        == before["run_em_ticked"] + len(ladder)
+    )
+    assert em_mod.TRACE_COUNTS["run_em"] == before["run_em"]
+    # one ExecutableKey per size at the pool's batch — sizes never alias
+    keys = [
+        k for k in sess.cache_keys
+        if k.tick_iters is not None and k.batch == 2
+    ]
+    assert {k.tick_iters for k in keys} == set(ladder)
+    assert len(keys) == len(ladder)
+    st = engine.stats()
+    assert st["adaptive"] and st["tick_cost"]["model_per_step_s"] > 0
+    assert st["steps_saved_early_exit"] >= 0
+
+    # a second adaptive engine on the same session: zero new traces for
+    # the whole ladder (warm AOT executables)
+    before = dict(em_mod.TRACE_COUNTS)
+    engine2 = SegmentationEngine(
+        sess, max_batch=2, tick_iters="auto", tick_ladder=ladder,
+        bucket=engine.bucket,
+    )
+    engine2.submit(plans[0], rid=0, seed=0)
+    (c2,) = engine2.run()
+    assert em_mod.TRACE_COUNTS == before
+    _assert_matches_serial(c2, serial[0])
 
 
 def test_mixed_k_requests_share_one_pool():
