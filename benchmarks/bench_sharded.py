@@ -14,6 +14,11 @@ accelerator platforms: the flag only affects *host* devices); the parent
 forwards the child's JSON.  On CPU the 8 "devices" share the machine's
 cores, so the sharded timings measure collective/partitioning overhead,
 not speedup — the number to watch off-TPU is the overhead ratio.
+
+The size sweep also records the calibrated cost model's shard choice per
+size (``--shards auto``, DESIGN.md §18); under ``--check`` the parent
+gates that the chosen shard count's measured time stays within 10% of
+the best fixed shard count in every cell of the sweep.
 """
 
 from __future__ import annotations
@@ -76,6 +81,16 @@ def _measure() -> dict:
                     "compile_seconds": round(exe.compile_seconds, 3),
                     "em_iters": int(res.em_iters),
                 }
+                if shards == 1:
+                    # The cost-model shard routing for this size
+                    # (--shards auto, DESIGN.md §18); the parent's
+                    # --check gate holds the chosen count within 10% of
+                    # the measured-best fixed count.
+                    per["autotune"] = sess.cost_model().choose_shards(
+                        mode=mode, bucket=plan.bucket, candidates=SHARDS,
+                        max_em_iters=sess.config.max_em_iters,
+                        max_map_iters=sess.config.max_map_iters,
+                    ).as_dict()
             match = bool(
                 (segmentations[min(SHARDS)] == segmentations[max(SHARDS)]).all()
             )
@@ -153,6 +168,23 @@ def main() -> None:
         ["size", "shards", "optimize_s", "em_iters", "labels_match"],
         size_rows,
     )
+
+    from benchmarks import common
+
+    if common.CHECK:
+        # The shard-autotuner gate (DESIGN.md §18): at every size in the
+        # sweep the cost model's chosen shard count must measure within
+        # 10% of the best fixed shard count — the model is allowed to be
+        # wrong about absolute seconds, not about the ranking.
+        for size, per in result["sizes"].items():
+            chosen = per["autotune"]["shards"]
+            measured = {s: per[str(s)]["optimize_seconds"] for s in SHARDS}
+            best = min(measured.values())
+            assert measured[chosen] <= best * 1.10, (
+                f"shard autotuner regressed at size {size}: chose "
+                f"{chosen} shards ({measured[chosen]}s) vs best fixed "
+                f"{best}s (measured {measured}; decision {per['autotune']})"
+            )
 
 
 if __name__ == "__main__":

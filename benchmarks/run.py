@@ -21,8 +21,13 @@ Pass section names to run a subset: ``python -m benchmarks.run table1 fig3``.
 
 ``--check`` turns each section's regression gates into hard assertions
 (``benchmarks.common.CHECK``): a gated comparison that regresses — e.g. the
-``segment_volume`` batch="auto" path running slower than the serial loop
-(bench_pmrf) — fails the run instead of only being reported.
+autotuned ``segment_volume`` batch="auto" plan losing to the best fixed
+config by more than 10% (bench_pmrf), or the ``--shards auto`` choice
+losing a cell of the sharded size sweep (bench_sharded) — fails the run
+instead of only being reported.  ``--check`` also runs the
+calibration-table drift gate: the checked-in
+``src/repro/planning/calibration.json`` must refit byte-identically from
+its own stored observations (DESIGN.md §18).
 """
 
 from __future__ import annotations
@@ -35,6 +40,25 @@ SECTIONS = (
     "table1", "fig3", "fig4", "faithful_vs_static", "pmrf", "api", "sharded",
     "serve", "kernels", "roofline",
 )
+
+
+def _check_calibration_drift() -> None:
+    """The drift gate (DESIGN.md §18): the checked-in calibration table is
+    a pure function of its own stored observations, so refitting must
+    reproduce the file byte-for-byte.  Drift means a stale fit or a hand
+    edit — the autotuner gates above would be vouching for a table nobody
+    can regenerate."""
+    from repro.planning import costmodel as planning
+
+    table = planning.load_table()
+    refit = planning.fit_table(table["observations"], table["meta"])
+    if planning.table_to_json(refit) != planning.default_table_path().read_text():
+        raise AssertionError(
+            "calibration-table drift: src/repro/planning/calibration.json "
+            "does not refit from its own stored observations; regenerate "
+            "with PYTHONPATH=src python -m repro.planning.calibrate --refit"
+        )
+    print("calibration table: refit reproduces the checked-in bytes")
 
 
 def main() -> None:
@@ -57,6 +81,15 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
         print(f"===== {name} done in {time.perf_counter()-t0:.1f}s =====\n")
+    from benchmarks import common
+
+    if common.CHECK:
+        print("===== calibration drift gate =====")
+        try:
+            _check_calibration_drift()
+        except Exception:
+            failures.append("calibration-drift")
+            traceback.print_exc()
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
 

@@ -41,6 +41,7 @@ from jax.sharding import Mesh
 from repro.analysis import budget as budget_mod
 from repro.api.config import ExecutionConfig
 from repro.api.errors import FallbackError, PlanError
+from repro.planning import costmodel as planning_mod
 from repro.core.pmrf import distributed as distributed_mod
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import energy as energy_mod
@@ -101,6 +102,10 @@ class Plan:
     problem: pipeline_mod.Problem
     bucket: BucketKey
     init_seconds: float
+    # Cost-model estimate (DESIGN.md §18) for one warm execute of this
+    # plan under the session's config — what the autotuner compares when
+    # routing, surfaced here so callers can budget before executing.
+    predicted_optimize_s: Optional[float] = None
     # Padded-input memo keyed by (bucket, seed, init): repeat executes of
     # the same plan are pure device replays, not re-pads (see _pad_plan).
     _padded: dict = field(default_factory=dict, repr=False, compare=False)
@@ -289,8 +294,48 @@ class Segmenter:
             oversegmentation=oversegmentation,
         )
         init_s = time.perf_counter() - t0
+        bucket = self.bucket_of(problem.hoods)
         return Plan(
-            problem=problem, bucket=self.bucket_of(problem.hoods), init_seconds=init_s
+            problem=problem,
+            bucket=bucket,
+            init_seconds=init_s,
+            predicted_optimize_s=self.cost_model().predict_solve(
+                mode=self.config.mode,
+                bucket=bucket,
+                n_labels=self.config.n_labels,
+                shards=self.config.shards,
+                precision=self.config.precision,
+                max_em_iters=self.config.max_em_iters,
+                max_map_iters=self.config.max_map_iters,
+            ),
+        )
+
+    def cost_model(self) -> planning_mod.CostModel:
+        """The calibrated plan cost model for this session's platform
+        (DESIGN.md §18) — every autotuned routing decision below queries
+        this one object."""
+        return planning_mod.model_for(self.config)
+
+    def choose_batch(
+        self, plans: Sequence[Plan], *, joint_bucket: Optional[BucketKey] = None
+    ) -> planning_mod.BatchDecision:
+        """Cost-model verdict for coalescing ``plans`` into one lockstep
+        launch vs executing them serially (what ``segment_stack``'s
+        ``batch="auto"`` routes on — exposed so callers and benchmarks can
+        inspect the predicted seconds behind the decision)."""
+        if joint_bucket is None:
+            joint_bucket = BucketKey(
+                *(max(b[d] for b in (p.bucket for p in plans)) for d in range(3))
+            )
+        c = self.config
+        return self.cost_model().choose_batch(
+            mode=c.mode,
+            buckets=[p.bucket for p in plans],
+            joint_bucket=joint_bucket,
+            n_labels=c.n_labels,
+            precision=c.precision,
+            max_em_iters=c.max_em_iters,
+            max_map_iters=c.max_map_iters,
         )
 
     # ------------------------------------------------------------------
@@ -823,12 +868,17 @@ class Segmenter:
 
         ``batch="always"``/``"auto"`` submit every slice under the stack's
         joint bucket (elementwise max) so the whole volume coalesces into
-        one launch; ``"auto"`` falls back to serial execution when the
-        capacity spread exceeds 2x (padding FLOPs would eat the win) or on
-        CPU — a vmapped ``while_loop`` runs every lane to the slowest
-        slice's convergence and XLA:CPU serializes the lanes, while the
-        serial path is already warm-cache cheap (BENCH_api.json tracks
-        both); ``"never"`` always runs serially.
+        one launch; ``"never"`` always runs serially.  ``"auto"`` asks the
+        calibrated cost model (DESIGN.md §18) which side is predicted
+        faster: the batched side is priced at the joint bucket with the
+        measured lockstep-iteration inflation and the platform's
+        lane-serialization factor (on XLA:CPU the vmapped lanes execute
+        serially, so batching loses — the model predicts the BENCH_pmrf
+        inversion instead of hard-coding a platform check), the serial
+        side at each lane's own bucket (so a wide capacity spread shows up
+        as padding cost, not as a fixed 2x rule).  Setting
+        ``REPRO_DISABLE_AUTOTUNE=1`` restores the pre-§18 heuristic
+        (accelerator-only batching with a 2x capacity-spread cap).
         """
         if batch not in ("auto", "always", "never"):
             raise ValueError(f"batch must be auto/always/never, got {batch!r}")
@@ -846,19 +896,22 @@ class Segmenter:
             raise ValueError("segment_stack: empty image stack")
         plans = [self.plan(img) for img in images]
 
-        problems = [p.problem for p in plans]
-        use_batch = batch == "always" or (
-            batch == "auto"
-            and self.config.shards == 1
-            and pipeline_mod._can_batch(problems)
-            and jax.default_backend() != "cpu"
+        joint = BucketKey(
+            *(max(b[d] for b in (p.bucket for p in plans)) for d in range(3))
         )
+        if batch == "always":
+            use_batch = True
+        elif batch == "never" or self.config.shards > 1 or len(plans) < 2:
+            use_batch = False
+        elif planning_mod.autotune_disabled():
+            use_batch = planning_mod.legacy_batch_choice(
+                [p.problem.hoods.capacity for p in plans], jax.default_backend()
+            )
+        else:
+            use_batch = self.choose_batch(plans, joint_bucket=joint).use_batch
         if not use_batch:
             results = [self.execute(p, seed=seed) for p in plans]
         else:
-            joint = BucketKey(
-                *(max(b[d] for b in (p.bucket for p in plans)) for d in range(3))
-            )
             for p in plans:
                 self.submit(p, seed=seed, bucket=joint)
             results = self.drain()

@@ -1,0 +1,44 @@
+"""Calibrated cost model + plan autotuner (DESIGN.md §18).
+
+``planning`` answers one question for the session layer and the launch
+CLIs: *given this problem's bucket and this execution config, how many
+seconds will each candidate plan cost?* — so plan selection
+(``segment_stack(batch="auto")``, ``--shards auto``, the serving
+engine's tick sizing) routes on predictions from one calibrated model
+instead of hard-coded platform checks.
+
+This package must stay importable without ``repro.api`` (the session
+layer imports *us*) and without initializing a JAX backend (subprocess
+benches and the analysis CLI load tables headlessly).
+"""
+
+from .costmodel import (
+    BatchDecision,
+    CostModel,
+    ShardDecision,
+    autotune_disabled,
+    default_table_path,
+    fit_table,
+    legacy_batch_choice,
+    load_table,
+    model_for,
+    reset_models,
+    table_to_json,
+)
+from .lsq import DecayedAffineFit, nnls
+
+__all__ = [
+    "BatchDecision",
+    "CostModel",
+    "DecayedAffineFit",
+    "ShardDecision",
+    "autotune_disabled",
+    "default_table_path",
+    "fit_table",
+    "legacy_batch_choice",
+    "load_table",
+    "model_for",
+    "nnls",
+    "reset_models",
+    "table_to_json",
+]

@@ -75,6 +75,8 @@ from repro.api.errors import FallbackError, RequestError
 from repro.api.session import BucketKey, Plan, Segmenter
 from repro.core.pmrf import em as em_mod
 from repro.core.pmrf import pipeline as pipeline_mod
+from repro.planning import costmodel as planning_mod
+from repro.planning.lsq import DecayedAffineFit
 from repro.testing import chaos as chaos_mod
 from repro.training.fault import StragglerWatchdog
 
@@ -321,8 +323,13 @@ class SegmentationEngine:
         self._phase_s = {"admit": 0.0, "advance": 0.0, "sync": 0.0, "retire": 0.0}
         self._size_ticks: Dict[int, int] = {}
         self._size_s: Dict[int, float] = {}
-        self._cm = {"n": 0.0, "s": 0.0, "d": 0.0, "ss": 0.0, "sd": 0.0}
-        self._cm_decay = 0.95
+        # One cost-model implementation, two consumers (DESIGN.md §18):
+        # the online tick-cost fit is the same DecayedAffineFit the
+        # calibration machinery uses, and until it has observations it
+        # falls back to the calibrated table's tick-cost prior instead of
+        # blind constants (see _tick_cost_prior).
+        self._cm = DecayedAffineFit(decay=0.95)
+        self._tick_prior: Optional[Tuple[float, float]] = None
         self._steps_ewma: Optional[float] = None   # micro-steps per request
         self._desired_streak: Tuple[int, int] = (tick_iters, 0)
 
@@ -591,14 +598,28 @@ class SegmentationEngine:
         size = self.tick_iters
         self._size_ticks[size] = self._size_ticks.get(size, 0) + 1
         self._size_s[size] = self._size_s.get(size, 0.0) + duration
-        cm = self._cm
-        for k in cm:
-            cm[k] *= self._cm_decay
-        cm["n"] += 1.0
-        cm["s"] += steps
-        cm["d"] += duration
-        cm["ss"] += steps * steps
-        cm["sd"] += steps * duration
+        self._cm.observe(steps, duration)
+
+    def _tick_cost_default(self) -> Tuple[float, float]:
+        """Cold-start ``(a, b)`` for the tick-cost fit: the calibrated
+        plan model's prediction for this pool (DESIGN.md §18) — per-launch
+        dispatch as ``a``, one pool micro-step as ``b`` — so the first
+        adaptive decisions start from measured-platform numbers instead of
+        blind constants.  Falls back to the historical ``(5e-3, 5e-3)``
+        when the bucket is still unknown or autotuning is disabled."""
+        if self._tick_prior is not None:
+            return self._tick_prior
+        if self.bucket is None or planning_mod.autotune_disabled():
+            return 5e-3, 5e-3
+        cfg = self.session.config
+        self._tick_prior = planning_mod.model_for(cfg).tick_cost_prior(
+            mode=cfg.mode,
+            bucket=self.bucket,
+            width=self.max_batch,
+            n_labels=cfg.n_labels,
+            precision=cfg.precision,
+        )
+        return self._tick_prior
 
     def cost_model(self) -> Tuple[float, float]:
         """Fitted per-tick cost ``(a, b)``: ``cost ~= a + b*steps`` seconds
@@ -617,20 +638,7 @@ class SegmentationEngine:
             if self.ticks
             else 0.0
         )
-        cm = self._cm
-        if cm["n"] >= 2.0:
-            var = cm["ss"] - cm["s"] * cm["s"] / cm["n"]
-            if var > 1e-9:
-                b = (cm["sd"] - cm["s"] * cm["d"] / cm["n"]) / var
-                b = max(b, 1e-6)
-                a = max((cm["d"] - b * cm["s"]) / cm["n"], a_floor)
-                return a, b
-        if cm["n"] > 0.0:
-            mean_s = cm["s"] / cm["n"]
-            mean_d = cm["d"] / cm["n"]
-            if mean_s > 0:
-                return max(0.3 * mean_d, a_floor), max(0.7 * mean_d / mean_s, 1e-6)
-        return 5e-3, 5e-3
+        return self._cm.fit(a_floor=a_floor, default=self._tick_cost_default())
 
     def _request_steps_estimate(self) -> float:
         if self._steps_ewma is not None:

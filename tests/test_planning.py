@@ -1,0 +1,343 @@
+"""Tests for the calibrated cost model + plan autotuner (repro.planning,
+DESIGN.md §18).
+
+Pins the properties the autotuner's consumers rely on:
+
+* **determinism** — ``fit_table`` is a pure function of the observation
+  set (byte-identical JSON across refits and observation orderings), and
+  the checked-in ``calibration.json`` refits byte-identically from its
+  own stored observations (the same invariant the ``--check`` drift gate
+  and the CT002 analysis pass enforce);
+* **monotonicity** — predictions are non-decreasing along the capacity,
+  K, and width probe ladders (``registry.CALIBRATION_PROBE_*``, the same
+  ladders the CT005 audit walks);
+* **fixture agreement** — the autotuned choice recorded in the
+  regenerated ``BENCH_pmrf.json`` / ``BENCH_sharded.json`` fixtures is
+  within 10% of the measured-best fixed config in every cell (the ISSUE's
+  acceptance bar, mirrored from the ``benchmarks/run.py --check`` gates);
+* **routing** — ``segment_stack(batch="auto")`` reuses warm executables
+  (zero retraces on the second call) and ``REPRO_DISABLE_AUTOTUNE=1``
+  restores the legacy platform heuristic;
+* **engine parity** — ``DecayedAffineFit`` reproduces the decayed-LSQ
+  math the serving engine previously ran inline (same fallback ladder:
+  affine fit -> mean split -> default, with the a_floor clamp).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis import registry
+from repro.core import synthetic
+from repro.core.pmrf import em as em_mod
+from repro.planning import costmodel as planning
+from repro.planning.lsq import DecayedAffineFit, nnls
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _model() -> planning.CostModel:
+    return planning.CostModel(planning.load_table())
+
+
+def _images(n=2, shape=(44, 44), seed=3):
+    vol = synthetic.make_synthetic_volume(seed=seed, n_slices=n, shape=shape)
+    return [np.asarray(im) for im in vol.images]
+
+
+# ---------------------------------------------------------------------------
+# calibration determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fit_table_is_deterministic_and_order_free():
+    table = planning.load_table()
+    obs, meta = table["observations"], table["meta"]
+    a = planning.table_to_json(planning.fit_table(obs, meta))
+    b = planning.table_to_json(planning.fit_table(obs, meta))
+    # fit_table canonicalizes the observation order before solving, so
+    # the table is a function of the observation SET
+    c = planning.table_to_json(planning.fit_table(list(reversed(obs)), meta))
+    assert a == b == c
+
+
+def test_checked_in_table_refits_byte_identically():
+    # the unit-test twin of the benchmarks/run.py --check drift gate and
+    # the CT002 analysis finding
+    table = planning.load_table()
+    refit = planning.fit_table(table["observations"], table["meta"])
+    assert (
+        planning.table_to_json(refit)
+        == planning.default_table_path().read_text()
+    ), "calibration.json drifted from its own observations; regenerate with " \
+       "python -m repro.planning.calibrate --refit"
+
+
+def test_checked_in_coefficients_finite_nonnegative():
+    table = planning.load_table()
+    for mode, coeffs in table["coefficients"].items():
+        for name, v in coeffs.items():
+            assert np.isfinite(v) and v >= 0, (mode, name, v)
+
+
+def test_nnls_recovers_known_nonnegative_solution():
+    rng = np.random.default_rng(0)
+    A = rng.uniform(0.1, 2.0, size=(40, 4))
+    x_true = np.array([0.5, 0.0, 3.0, 0.25])
+    x = nnls(A, A @ x_true)
+    assert np.allclose(x, x_true, atol=1e-6)
+    assert (x >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# prediction monotonicity (the CT005 ladders)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", planning.MODES)
+def test_predictions_monotone_in_capacity(mode):
+    m = _model()
+    preds = [
+        m.predict_solve(mode=mode, bucket=b, max_em_iters=20, max_map_iters=10)
+        for b in registry.CALIBRATION_PROBE_BUCKETS
+    ]
+    assert all(b >= a for a, b in zip(preds, preds[1:])), preds
+    assert all(p > 0 for p in preds)
+
+
+@pytest.mark.parametrize("mode", ("static", "static-pallas"))
+def test_predictions_monotone_in_k(mode):
+    m = _model()
+    bucket = registry.CALIBRATION_PROBE_BUCKETS[1]
+    preds = [
+        m.predict_solve(mode=mode, bucket=bucket, n_labels=k,
+                        max_em_iters=20, max_map_iters=10)
+        for k in (2, 3, 5, 8)
+    ]
+    assert all(b >= a for a, b in zip(preds, preds[1:])), preds
+
+
+def test_predictions_monotone_in_width():
+    m = _model()
+    bucket = registry.CALIBRATION_PROBE_BUCKETS[0]
+    preds = [
+        m.predict_batched(mode="static", bucket=bucket, width=w,
+                          max_em_iters=20, max_map_iters=10)
+        for w in registry.CALIBRATION_PROBE_WIDTHS
+    ]
+    assert all(b >= a for a, b in zip(preds, preds[1:])), preds
+    assert m.lockstep_inflation(1) == 1.0
+    assert m.lockstep_inflation(8) > m.lockstep_inflation(2) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# fixture agreement: the autotuned choice vs the measured sweep
+# ---------------------------------------------------------------------------
+
+
+def test_autotuned_batch_choice_matches_bench_pmrf_fixture():
+    sv = json.loads((REPO / "BENCH_pmrf.json").read_text())["segment_volume"]
+    loop_s = sv["loop_mean_optimize_seconds"]
+    batch_s = sv["batched_mean_optimize_seconds"]
+    chosen_s = batch_s if sv["autotune"]["use_batch"] else loop_s
+    assert chosen_s <= min(loop_s, batch_s) * 1.10, sv["autotune"]
+
+
+def test_autotuned_shard_choice_matches_bench_sharded_fixture():
+    sizes = json.loads((REPO / "BENCH_sharded.json").read_text())["sizes"]
+    assert set(sizes) == {"96", "192", "288"}
+    for size, per in sizes.items():
+        measured = {
+            int(s): d["optimize_seconds"]
+            for s, d in per.items()
+            if isinstance(d, dict) and "optimize_seconds" in d
+        }
+        chosen = per["autotune"]["shards"]
+        assert chosen in measured, (size, per["autotune"])
+        best = min(measured.values())
+        assert measured[chosen] <= best * 1.10, (size, measured, per["autotune"])
+
+
+# ---------------------------------------------------------------------------
+# session routing: warm reuse + the escape hatch
+# ---------------------------------------------------------------------------
+
+
+def _fresh(config=None):
+    import jax
+
+    jax.clear_caches()
+    api.reset_sessions()
+    return api.Segmenter(config or api.ExecutionConfig(overseg_grid=(6, 6)))
+
+
+def test_plan_carries_predicted_seconds():
+    seg = _fresh()
+    plan = seg.plan(_images(n=1)[0])
+    assert plan.predicted_optimize_s is not None
+    assert np.isfinite(plan.predicted_optimize_s) and plan.predicted_optimize_s > 0
+
+
+def test_autotuned_segment_stack_reuses_warm_executables():
+    seg = _fresh()
+    imgs = _images(n=3)
+    res_a, _ = seg.segment_stack(imgs, batch="auto")
+    misses = seg.stats.misses
+    before = dict(em_mod.TRACE_COUNTS)
+    res_b, _ = seg.segment_stack(imgs, batch="auto")
+    assert em_mod.TRACE_COUNTS == before, \
+        "autotuned plans must reuse the warm executable cache, not retrace"
+    assert seg.stats.misses == misses
+    for a, b in zip(res_a, res_b):
+        assert (np.asarray(a.segmentation) == np.asarray(b.segmentation)).all()
+
+
+def test_escape_hatch_restores_legacy_heuristic(monkeypatch):
+    # the legacy rule, pinned: batch iff >1 slice, <=2x capacity spread,
+    # and not on CPU
+    assert planning.legacy_batch_choice([100, 120], "tpu")
+    assert not planning.legacy_batch_choice([100, 300], "tpu")   # >2x spread
+    assert not planning.legacy_batch_choice([100, 120], "cpu")
+    assert not planning.legacy_batch_choice([100], "tpu")        # single slice
+
+    monkeypatch.delenv(planning.DISABLE_ENV, raising=False)
+    assert not planning.autotune_disabled()
+    monkeypatch.setenv(planning.DISABLE_ENV, "0")
+    assert not planning.autotune_disabled()
+    monkeypatch.setenv(planning.DISABLE_ENV, "1")
+    assert planning.autotune_disabled()
+
+    # with the hatch set, batch="auto" falls back to the legacy choice
+    # (loop on CPU) and must match batch="never" bit-identically
+    seg = _fresh()
+    imgs = _images(n=2)
+    res_auto, _ = seg.segment_stack(imgs, batch="auto")
+    res_loop, _ = seg.segment_stack(imgs, batch="never")
+    for a, b in zip(res_auto, res_loop):
+        assert (np.asarray(a.segmentation) == np.asarray(b.segmentation)).all()
+
+
+def test_session_choose_batch_decision_is_calibrated():
+    seg = _fresh()
+    plans = [seg.plan(img) for img in _images(n=2)]
+    dec = seg.choose_batch(plans)
+    assert isinstance(dec, planning.BatchDecision)
+    assert dec.width == 2
+    assert dec.serial_s > 0 and dec.batched_s > 0
+    d = dec.as_dict()
+    assert set(d) == {
+        "use_batch", "predicted_serial_s", "predicted_batched_s", "width",
+        "lockstep_inflation", "calibrated",
+    }
+
+
+# ---------------------------------------------------------------------------
+# model_for: platform matching + builtin fallback
+# ---------------------------------------------------------------------------
+
+
+def test_model_for_uses_checked_in_table_on_matching_platform():
+    planning.reset_models()
+    table_platform = planning.load_table()["meta"]["platform"]
+    m = planning.model_for(platform=table_platform)
+    assert m.calibrated
+    assert planning.model_for(platform=table_platform) is m  # cached
+
+
+def test_model_for_falls_back_to_builtin_on_other_platform():
+    planning.reset_models()
+    table_platform = planning.load_table()["meta"]["platform"]
+    other = "tpu" if table_platform != "tpu" else "cpu"
+    m = planning.model_for(platform=other)
+    assert not m.calibrated
+    # uncalibrated defaults still predict something finite and ordered
+    preds = [
+        m.predict_solve(mode="static", bucket=b, max_em_iters=20,
+                        max_map_iters=10)
+        for b in registry.CALIBRATION_PROBE_BUCKETS
+    ]
+    assert all(np.isfinite(p) and p > 0 for p in preds)
+    assert all(b >= a for a, b in zip(preds, preds[1:]))
+    planning.reset_models()
+
+
+# ---------------------------------------------------------------------------
+# shard decision surface
+# ---------------------------------------------------------------------------
+
+
+def test_warn_if_forced():
+    dec = planning.ShardDecision(shards=1, predicted_s={1: 0.1, 8: 0.2})
+    assert dec.warn_if_forced(1) is None            # the chosen count
+    assert dec.warn_if_forced(4) is None            # not in the prediction set
+    warning = dec.warn_if_forced(8)
+    assert warning is not None and "2.00x" in warning
+    assert dec.warn_if_forced(8, tolerance=1.5) is None  # within tolerance
+
+
+def test_choose_shards_breaks_ties_toward_fewer():
+    m = _model()
+    dec = m.choose_shards(
+        mode="static-pallas", bucket=(4096, 256, 192), candidates=(8, 1),
+        max_em_iters=20, max_map_iters=10,
+    )
+    assert set(dec.predicted_s) == {1, 8}
+    assert dec.shards == min(
+        sorted(dec.predicted_s), key=lambda s: (dec.predicted_s[s], s)
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine parity: DecayedAffineFit
+# ---------------------------------------------------------------------------
+
+
+def test_decayed_affine_fit_recovers_line():
+    f = DecayedAffineFit(decay=1.0)  # undecayed: plain least squares
+    for x in (1.0, 2.0, 3.0, 4.0, 5.0):
+        f.observe(x, 2.0 + 3.0 * x)
+    a, b = f.fit()
+    assert abs(a - 2.0) < 1e-9 and abs(b - 3.0) < 1e-9
+
+
+def test_decayed_affine_fit_fallback_ladder():
+    # no observations -> default (clamped by a_floor / b_min)
+    f = DecayedAffineFit()
+    assert f.fit(default=(0.01, 0.02)) == (0.01, 0.02)
+    assert f.fit(a_floor=0.5, default=(0.01, 0.02)) == (0.5, 0.02)
+    # one observation -> the engine's 30/70 mean split
+    f.observe(4.0, 1.0)
+    a, b = f.fit()
+    assert abs(a - 0.3) < 1e-12 and abs(b - 0.7 / 4.0) < 1e-12
+    # zero x-variance -> still the mean split, never a divide-by-zero
+    f.observe(4.0, 2.0)
+    a, b = f.fit()
+    assert a > 0 and b > 0
+
+
+def test_decayed_affine_fit_tracks_regime_change():
+    f = DecayedAffineFit(decay=0.95)
+    for x in (1.0, 2.0, 4.0, 8.0):
+        f.observe(x, 0.1 + 0.01 * x)
+    # cost regime doubles; the decayed fit must follow recent samples
+    for _ in range(40):
+        for x in (1.0, 2.0, 4.0, 8.0):
+            f.observe(x, 0.2 + 0.02 * x)
+    a, b = f.fit()
+    assert abs(a - 0.2) < 0.02 and abs(b - 0.02) < 0.005
+
+
+def test_tick_cost_prior_positive_and_width_scaled():
+    m = _model()
+    a1, b1 = m.tick_cost_prior(
+        mode="static-pallas", bucket=(8192, 512, 384), width=1
+    )
+    a8, b8 = m.tick_cost_prior(
+        mode="static-pallas", bucket=(8192, 512, 384), width=8
+    )
+    assert a1 > 0 and b1 > 0
+    assert a8 == a1                 # dispatch constant is width-free
+    assert b8 > b1                  # lane serialization scales the slope
